@@ -1,0 +1,184 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  bench_array_ops     → paper Table I   (array collectives)
+  bench_table_ops     → paper Tables II/III (relational operators)
+  bench_shuffle       → paper Fig 2     (shuffle primitive)
+  bench_join_scaling  → paper Fig 16    (Cylon join scaling study)
+  bench_mds           → paper Figs 14/15 (MDS composition pipeline)
+  bench_lm_step       → framework: LM train/decode step (tokens/s)
+  bench_kernels       → Pallas kernel interpret-mode vs ref overhead
+
+Prints ``name,us_per_call,derived`` CSV (derived = rows/s, tokens/s, …).
+Wall times are single-host CPU numbers — scaling behaviour at pod size is
+covered by the dry-run collective analysis (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistTable, Table, local_context, table_ops
+from repro.core import array_ops
+
+CTX = local_context()
+ROWS = []
+
+
+def _timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def _emit(name: str, us: float, derived: str):
+    ROWS.append(f"{name},{us:.1f},{derived}")
+    print(ROWS[-1], flush=True)
+
+
+def _table(n: int, n_keys: int = None, seed: int = 0) -> DistTable:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys or max(n // 4, 2), n).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    return DistTable.from_local(
+        Table.from_arrays({"k": jnp.asarray(keys), "v": jnp.asarray(vals)}),
+        CTX)
+
+
+# ---------------------------------------------------------------------------
+def bench_array_ops(n: int = 1 << 20):
+    """Paper Table I: array collective operators."""
+    x = jnp.ones((8, n // 8), jnp.float32)
+    flat = jnp.ones((n,), jnp.float32)
+    for name, fn, arg in [
+        ("allreduce", lambda v: array_ops.allreduce(v, ctx=CTX), x),
+        ("allgather", lambda v: array_ops.allgather(v, ctx=CTX), flat),
+        ("broadcast", lambda v: array_ops.broadcast(v, ctx=CTX), x),
+        ("alltoall", lambda v: array_ops.alltoall(v, ctx=CTX), flat),
+        ("reduce_scatter",
+         lambda v: array_ops.reduce_scatter(v, ctx=CTX), flat),
+    ]:
+        jfn = jax.jit(fn)
+        us = _timeit(jfn, arg)
+        gbps = n * 4 / (us * 1e-6) / 1e9
+        _emit(f"tab1_array_{name}", us, f"{gbps:.2f}GB/s")
+
+
+def bench_table_ops(n: int = 200_000):
+    """Paper Tables II/III: relational operators at n rows."""
+    dt = _table(n)
+    dt2 = _table(n, seed=1)
+
+    cases = [
+        ("select", lambda: table_ops.select(dt, lambda c: c["v"] > 0,
+                                            ctx=CTX)),
+        ("project", lambda: table_ops.project(dt, ["v"], ctx=CTX)),
+        ("orderby", lambda: table_ops.orderby(dt, "v", ctx=CTX)),
+        ("groupby", lambda: table_ops.groupby_aggregate(
+            dt, ["k"], [("v", "sum"), ("v", "mean")], ctx=CTX)),
+        ("aggregate", lambda: table_ops.aggregate(dt, "v", "sum", ctx=CTX)),
+        ("union", lambda: table_ops.union(dt, dt2, ctx=CTX)),
+        ("difference", lambda: table_ops.difference(dt, dt2, ctx=CTX)),
+        ("intersect", lambda: table_ops.intersect(dt, dt2, ctx=CTX)),
+    ]
+    for name, fn in cases:
+        us = _timeit(fn)
+        _emit(f"tab23_table_{name}", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+
+def bench_shuffle(n: int = 500_000):
+    """Paper Fig 2: hash shuffle."""
+    dt = _table(n)
+    fn = lambda: table_ops.shuffle(dt, ["k"], ctx=CTX)
+    us = _timeit(fn)
+    _emit("fig2_shuffle", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+
+def bench_join_scaling():
+    """Paper Fig 16: join wall time while load grows (weak scaling proxy:
+    rows double, per-row time should stay ~flat)."""
+    for n in (50_000, 100_000, 200_000, 400_000):
+        rng = np.random.default_rng(0)
+        lk = rng.permutation(n).astype(np.int32)
+        rk = rng.permutation(n).astype(np.int32)
+        l = DistTable.from_local(Table.from_arrays(
+            {"k": jnp.asarray(lk), "a": jnp.asarray(lk, jnp.float32)}), CTX)
+        r = DistTable.from_local(Table.from_arrays(
+            {"k": jnp.asarray(rk), "b": jnp.asarray(rk, jnp.float32)}), CTX)
+        fn = lambda: table_ops.join(l, r, ["k"], out_capacity=n, ctx=CTX)
+        us = _timeit(fn, iters=3)
+        _emit(f"fig16_join_{n}", us, f"{n / (us * 1e-6) / 1e6:.2f}Mrow/s")
+
+
+def bench_mds():
+    """Paper Figs 14/15: table-prep + SMACOF MDS composition."""
+    from repro.apps.mds import mds_pipeline
+    for n in (64, 128, 256):
+        t0 = time.perf_counter()
+        path, emb = mds_pipeline(n_points=n, dim=2, iters=20, ctx=CTX)
+        dt = (time.perf_counter() - t0) * 1e6
+        _emit(f"fig15_mds_{n}pts", dt, f"stress={path[-1]:.3f}")
+
+
+def bench_lm_step():
+    """Framework: LM train + decode step at reduced config (CPU)."""
+    from repro.configs import get_config, reduced_config
+    from repro.models import transformer as T
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import (TrainConfig, init_train_state,
+                                        make_train_step)
+
+    for arch in ("smollm-360m", "mixtral-8x7b", "xlstm-125m"):
+        cfg = reduced_config(get_config(arch))
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(make_train_step(
+            cfg, TrainConfig(optimizer=OptimizerConfig())))
+        b, s = 4, 128
+        rng = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(rng, (b, s), 0,
+                                              cfg.vocab_size)}
+        batch["labels"] = batch["tokens"]
+        us = _timeit(lambda: step(state, batch)[1]["loss"], iters=3)
+        _emit(f"lm_train_step_{arch}", us,
+              f"{b * s / (us * 1e-6):.0f}tok/s")
+
+
+def bench_kernels():
+    """Pallas kernels (interpret) vs jnp reference wall time."""
+    from repro.kernels.flash_attention import ops as fops
+    from repro.kernels.segment_reduce import ops as sops
+
+    q = jnp.ones((1, 4, 256, 64), jnp.float32)
+    k = v = jnp.ones((1, 2, 256, 64), jnp.float32)
+    us_ref = _timeit(jax.jit(
+        lambda a, b, c: fops.flash_attention(a, b, c, force="ref")), q, k, v)
+    _emit("kernel_flash_ref_xla", us_ref, "256x256")
+
+    vals = jnp.ones((1 << 16,), jnp.float32)
+    segs = jnp.zeros((1 << 16,), jnp.int32)
+    us = _timeit(jax.jit(lambda a, b: sops.segment_reduce(a, b, 512,
+                                                          force="ref")),
+                 vals, segs)
+    _emit("kernel_segreduce_ref_xla", us, "65k_rows")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_array_ops()
+    bench_table_ops()
+    bench_shuffle()
+    bench_join_scaling()
+    bench_mds()
+    bench_lm_step()
+    bench_kernels()
+    print(f"# {len(ROWS)} benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

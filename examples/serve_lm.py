@@ -1,0 +1,43 @@
+"""Batched serving example: prefill + lockstep decode with typed caches.
+
+Demonstrates all four cache families the decode shape-cells exercise:
+full KV (phi3), sliding-window ring (mixtral), MLA latent (minicpm3), and
+SSM/xLSTM state (xlstm) — at reduced configs so it runs on CPU in seconds.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("phi3-mini-3.8b", "mixtral-8x7b", "minicpm3-4b",
+                 "xlstm-125m"):
+        cfg = reduced_config(get_config(arch))
+        params = T.init_lm(jax.random.PRNGKey(7), cfg)
+        engine = Engine(cfg, params, ServeConfig(max_len=64,
+                                                 temperature=0.0))
+        prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 12)),
+                              jnp.int32)
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, n_tokens=16)
+        dt = time.perf_counter() - t0
+        tps = out.size / dt
+        kinds = "/".join(sorted(set(cfg.block_pattern)))
+        print(f"{arch:18s} cache={kinds:12s} generated {out.shape} "
+              f"in {dt:.2f}s ({tps:.0f} tok/s)  sample={out[0, :8].tolist()}")
+        assert out.shape == (4, 16)
+        assert np.all((out >= 0) & (out < cfg.vocab_size))
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

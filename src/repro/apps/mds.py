@@ -1,0 +1,108 @@
+"""Multidimensional scaling — the paper's flagship composition (Figs 14/15).
+
+Reproduces the HPTMT pattern end to end:
+
+  1. *table operators* (dataflow style) curate the input point set —
+     select by quality, dedup, order;
+  2. the ``to_jax`` bridge hands the curated table to array land (Fig 13
+     line 28 / Fig 17 line 18);
+  3. *array operators* compute the row-partitioned distance matrix
+     (AllGather of the point block — Table I) and run SMACOF iterations,
+     with AllReduce for the global stress — the MPI side of Fig 14.
+
+Same code runs single-device (tests) or on a row-sharded mesh.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistTable, HPTMTContext, Table, table_ops
+from repro.core.array_ops import spmd_allgather, spmd_allreduce
+from repro.dataframe.frame import DataFrame
+
+
+def _pairwise_dist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None]
+          - 2 * x @ y.T)
+    return jnp.sqrt(jnp.maximum(d2, 1e-12))
+
+
+def smacof(delta: jnp.ndarray, dim: int, iters: int, seed: int
+           ) -> Tuple[List[float], jnp.ndarray]:
+    """Classic SMACOF on a full dissimilarity matrix (array operators).
+
+    The Guttman transform requires a strictly off-diagonal B matrix — the
+    sqrt-clamp in the distance kernel leaves ~1e-6 on the diagonal, which
+    (δ_ii/d_ii = 1) silently breaks the majorization, so both δ and the
+    ratio matrix are explicitly diagonal-masked.
+    """
+    n = delta.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    delta = jnp.where(eye, 0.0, delta)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, dim)) * 0.1
+
+    @jax.jit
+    def step(x):
+        d = _pairwise_dist(x, x)
+        ratio = jnp.where(~eye & (d > 1e-9),
+                          delta / jnp.maximum(d, 1e-9), 0.0)
+        b = -ratio
+        b = b.at[jnp.arange(n), jnp.arange(n)].set(ratio.sum(1))
+        x_new = (b @ x) / n
+        stress = jnp.sum(jnp.where(eye, 0.0, (delta - d) ** 2)) / 2
+        return x_new, stress
+
+    path = []
+    for _ in range(iters):
+        x, stress = step(x)
+        path.append(float(stress))
+    return path, x
+
+
+def mds_pipeline(n_points: int, dim: int, iters: int, ctx: HPTMTContext,
+                 seed: int = 0) -> Tuple[List[float], jnp.ndarray]:
+    """Fig 14 end-to-end: table preprocessing → distance matrix → MDS."""
+    rng = np.random.default_rng(seed)
+    # raw point table with a quality column and some junk rows
+    n_raw = n_points + n_points // 3 + 1
+    feats = rng.normal(size=(n_raw, 4)).astype(np.float32)
+    quality = rng.uniform(size=n_raw).astype(np.float32)
+    # ensure exactly n_points survive the filter
+    order = np.argsort(-quality)
+    quality[order[:n_points]] = np.clip(quality[order[:n_points]], 0.5, None)
+    quality[order[n_points:]] = np.clip(quality[order[n_points:]], None,
+                                        0.49)
+    df = DataFrame.from_dict(
+        {"id": np.arange(n_raw, dtype=np.int32),
+         "quality": quality,
+         **{f"f{i}": feats[:, i] for i in range(4)}}, ctx)
+
+    # 1) table operators: select + order (deterministic row order)
+    curated = df.select(lambda c: c["quality"] >= 0.5).sort_values("id")
+
+    # 2) bridge to arrays
+    points = curated.to_jax([f"f{i}" for i in range(4)])  # (n_points, 4)
+    assert points.shape[0] == n_points
+
+    # 3) array operators: row-partitioned distance matrix
+    if ctx.is_distributed:
+        p = ctx.n_shards
+        pad = (-n_points) % p
+        pts = jnp.pad(points, ((0, pad), (0, 0)))
+
+        def block(local_pts):
+            all_pts = spmd_allgather(local_pts, ctx.data_axis)
+            return _pairwise_dist(local_pts, all_pts)
+
+        from jax.sharding import PartitionSpec as P
+        delta = ctx.shard_map(block, in_specs=P(ctx.data_axis),
+                              out_specs=P(ctx.data_axis))(pts)
+        delta = delta[:n_points, :n_points]
+    else:
+        delta = _pairwise_dist(points, points)
+
+    return smacof(delta, dim, iters, seed)

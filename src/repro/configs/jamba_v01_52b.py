@@ -1,0 +1,17 @@
+"""Jamba v0.1 52B — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+[arXiv:2403.19887; hf] 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2 on every other layer; one attention layer
+per 8-layer block (position 4), Mamba elsewhere.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=65536,
+    n_experts=16, experts_per_token=2, moe_every=2,
+    block_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    ssm_state_dim=16, ssm_conv_width=4, ssm_expand=2,
+)

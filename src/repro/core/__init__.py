@@ -1,0 +1,6 @@
+"""HPTMT core: the paper's operator architecture as a composable JAX module."""
+from . import array_ops, dataflow, table_ops
+from .context import HPTMTContext, host_test_context, local_context, make_mesh
+from .operator import Abstraction, Execution, Style, get_operator, list_operators
+from .table import DistTable, Table, hash_columns
+from .dataflow import TSet

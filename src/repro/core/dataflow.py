@@ -1,0 +1,246 @@
+"""Dataflow operators — the Twister2/TSet side of HPTMT (paper §V-B-2, §VII-A).
+
+Eager operators (``table_ops``) take whole tables in memory.  Dataflow
+operators process data **piece by piece**: the dataset is a stream of
+bounded-size chunks (the external-memory model — "datasets that do not fit
+into the available random access memory", Fig 5), and each operator consumes
+and produces chunks.  Distributed barriers (GroupBy/Join/OrderBy/Union) use
+the *combiner* pattern: per-chunk shuffle + partial result, merged at the
+barrier — so peak memory stays bounded by the chunk size, not the dataset.
+
+The same local/distributed kernels power both styles; only the driver
+differs.  That is the paper's Fig 9: dataflow operators and eager operators
+working together in a single parallel program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import table_ops
+from .context import HPTMTContext
+from .operator import Abstraction, Execution, Style, operator
+from .table import DistTable, Table
+
+
+# ---------------------------------------------------------------------------
+# plan nodes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Node:
+    kind: str
+    inputs: Tuple["_Node", ...] = ()
+    payload: dict = dataclasses.field(default_factory=dict)
+
+
+class TSet:
+    """A lazy, chunked, distributed dataset (Twister2 TSet analogue)."""
+
+    def __init__(self, node: _Node, ctx: HPTMTContext):
+        self._node = node
+        self._ctx = ctx
+
+    # -- sources -----------------------------------------------------------
+    @classmethod
+    def from_chunks(cls, chunks: Sequence[DistTable], ctx: HPTMTContext) -> "TSet":
+        return cls(_Node("source", payload={"chunks": list(chunks)}), ctx)
+
+    @classmethod
+    def from_table(cls, dt: DistTable, ctx: HPTMTContext,
+                   chunk_rows: Optional[int] = None) -> "TSet":
+        """Split a table into row-chunks of at most ``chunk_rows`` each."""
+        if chunk_rows is None or chunk_rows >= dt.capacity:
+            return cls.from_chunks([dt], ctx)
+        chunks = []
+        cap, p = dt.capacity, dt.n_shards
+        for start in range(0, cap, chunk_rows):
+            stop = min(start + chunk_rows, cap)
+            cols = {}
+            for k, v in dt.columns.items():
+                blocks = v.reshape((p, cap) + v.shape[1:])
+                cols[k] = blocks[:, start:stop].reshape(
+                    (p * (stop - start),) + v.shape[1:])
+            counts = jnp.clip(dt.counts - start, 0, stop - start)
+            chunks.append(DistTable(cols, counts))
+        return cls.from_chunks(chunks, ctx)
+
+    # -- piecewise (streaming) operators ------------------------------------
+    def select(self, predicate: Callable) -> "TSet":
+        return TSet(_Node("select", (self._node,), {"pred": predicate}),
+                    self._ctx)
+
+    def project(self, columns: Sequence[str]) -> "TSet":
+        return TSet(_Node("project", (self._node,), {"cols": tuple(columns)}),
+                    self._ctx)
+
+    def map_columns(self, fn: Callable[[Dict[str, jnp.ndarray]], Dict]) -> "TSet":
+        """Apply a per-chunk columnar transform (adds/replaces columns)."""
+        return TSet(_Node("map", (self._node,), {"fn": fn}), self._ctx)
+
+    # -- barrier (shuffling) operators ---------------------------------------
+    def join(self, other: "TSet", keys: Sequence[str], **kw) -> "TSet":
+        return TSet(_Node("join", (self._node, other._node),
+                          {"keys": tuple(keys), "kw": kw}), self._ctx)
+
+    def groupby(self, keys: Sequence[str], aggs: Sequence[Tuple[str, str]],
+                **kw) -> "TSet":
+        return TSet(_Node("groupby", (self._node,),
+                          {"keys": tuple(keys), "aggs": tuple(aggs), "kw": kw}),
+                    self._ctx)
+
+    def orderby(self, key: str, **kw) -> "TSet":
+        return TSet(_Node("orderby", (self._node,), {"key": key, "kw": kw}),
+                    self._ctx)
+
+    def union(self, other: "TSet", **kw) -> "TSet":
+        return TSet(_Node("union", (self._node, other._node), {"kw": kw}),
+                    self._ctx)
+
+    # -- sinks ----------------------------------------------------------------
+    def collect(self) -> DistTable:
+        """Execute the dataflow graph and materialize the result."""
+        chunks = _execute(self._node, self._ctx)
+        return _concat_chunks(chunks, self._ctx)
+
+    def reduce(self, column: str, op: str):
+        """Streaming scalar aggregate (per-chunk partials, merged)."""
+        chunks = _execute(self._node, self._ctx)
+        parts = [table_ops.aggregate(c, column, op, ctx=self._ctx)
+                 for c in chunks]
+        stack = jnp.stack(parts)
+        merge = {"sum": jnp.sum, "count": jnp.sum, "min": jnp.min,
+                 "max": jnp.max, "mean": jnp.mean}[op]
+        return merge(stack)
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Bridge to NumPy (paper Fig 13 line 28 / Fig 17 line 18)."""
+        return self.collect().to_numpy()
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+def _concat_chunks(chunks: List[DistTable], ctx: HPTMTContext) -> DistTable:
+    if len(chunks) == 1:
+        return chunks[0]
+    p = chunks[0].n_shards
+    names = chunks[0].column_names
+    out_cols = {}
+    cap = sum(c.capacity for c in chunks)
+    for name in names:
+        blocks = []
+        for shard in range(p):
+            for c in chunks:
+                v = c.columns[name]
+                blocks.append(v.reshape((p, c.capacity) + v.shape[1:])[shard])
+        out_cols[name] = jnp.concatenate(blocks, axis=0)
+    # rows are valid-prefix within each chunk block, not globally: re-compact
+    valid_parts = []
+    for c in chunks:
+        valid_parts.append(
+            jnp.arange(c.capacity, dtype=jnp.int32)[None, :] < c.counts[:, None])
+    valid = jnp.concatenate(valid_parts, axis=1).reshape(-1)  # (p*cap,)
+
+    def impl(cols, cnts, valid_flags, *, axis):
+        out, n, _ = table_ops._compact_cols(cols, valid_flags, cap)
+        return out, n[None]
+
+    from jax.sharding import PartitionSpec as P
+    cols2, counts2 = table_ops._run_sharded(
+        ctx, impl, (out_cols, jnp.zeros((p,), jnp.int32), valid),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
+    return DistTable(cols2, counts2)
+
+
+def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
+    if node.kind == "source":
+        return list(node.payload["chunks"])
+
+    if node.kind in ("select", "project", "map"):
+        chunks = _execute(node.inputs[0], ctx)
+        out = []
+        for c in chunks:
+            if node.kind == "select":
+                out.append(table_ops.select(c, node.payload["pred"], ctx=ctx))
+            elif node.kind == "project":
+                out.append(table_ops.project(c, node.payload["cols"], ctx=ctx))
+            else:
+                new_cols = dict(c.columns)
+                new_cols.update(node.payload["fn"](c.columns))
+                out.append(DistTable(new_cols, c.counts))
+        return out
+
+    if node.kind == "groupby":
+        # combiner pattern: partial aggregate per chunk, then merge partials
+        chunks = _execute(node.inputs[0], ctx)
+        keys, aggs = node.payload["keys"], node.payload["aggs"]
+        partial_aggs, merge_aggs = _split_aggs(aggs)
+        partials = []
+        for c in chunks:
+            part, _ = table_ops.groupby_aggregate(
+                c, keys, partial_aggs, ctx=ctx, **node.payload["kw"])
+            partials.append(part)
+        merged = _concat_chunks(partials, ctx)
+        final, _ = table_ops.groupby_aggregate(
+            merged, keys, merge_aggs, ctx=ctx, **node.payload["kw"])
+        final = _finalize_aggs(final, aggs, merge_aggs)
+        return [final]
+
+    # materializing barriers
+    if node.kind == "join":
+        left = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
+        right = _concat_chunks(_execute(node.inputs[1], ctx), ctx)
+        out, _ = table_ops.join(left, right, node.payload["keys"], ctx=ctx,
+                                **node.payload["kw"])
+        return [out]
+    if node.kind == "orderby":
+        t = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
+        out, _ = table_ops.orderby(t, node.payload["key"], ctx=ctx,
+                                   **node.payload["kw"])
+        return [out]
+    if node.kind == "union":
+        a = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
+        b = _concat_chunks(_execute(node.inputs[1], ctx), ctx)
+        out, _ = table_ops.union(a, b, ctx=ctx, **node.payload["kw"])
+        return [out]
+    raise ValueError(f"unknown node {node.kind}")
+
+
+def _split_aggs(aggs):
+    """Map requested aggregates to (per-chunk partial, merge) aggregates."""
+    partial, merge = [], []
+    for col, op in aggs:
+        if op in ("sum", "count"):
+            partial.append((col, op))
+            merge.append((f"{col}_{op}", "sum"))
+        elif op in ("min", "max"):
+            partial.append((col, op))
+            merge.append((f"{col}_{op}", op))
+        elif op == "mean":
+            partial.append((col, "sum"))
+            partial.append((col, "count"))
+            merge.append((f"{col}_sum", "sum"))
+            merge.append((f"{col}_count", "sum"))
+        else:
+            raise ValueError(op)
+    return tuple(dict.fromkeys(partial)), tuple(dict.fromkeys(merge))
+
+
+def _finalize_aggs(dt: DistTable, aggs, merge_aggs) -> DistTable:
+    merged = dict(dt.columns)
+    merge_labels = {f"{c}_{o}" for c, o in merge_aggs}
+    # key columns = everything the merge-groupby did not produce
+    out = {k: v for k, v in merged.items() if k not in merge_labels}
+    for col, op in aggs:
+        if op == "mean":
+            s = merged[f"{col}_sum_sum"]
+            c = merged[f"{col}_count_sum"]
+            out[f"{col}_mean"] = s / jnp.maximum(c, 1.0)
+        elif op in ("sum", "count"):
+            out[f"{col}_{op}"] = merged[f"{col}_{op}_sum"]
+        else:
+            out[f"{col}_{op}"] = merged[f"{col}_{op}_{op}"]
+    return DistTable(out, dt.counts)

@@ -1,0 +1,273 @@
+"""Columnar Table abstraction (paper §IV).
+
+An Arrow-style struct-of-arrays table, adapted to XLA's static-shape world
+(DESIGN.md §2 item 1):
+
+  * every column is a fixed-dtype array of length ``capacity`` (static);
+  * rows ``[0, num_rows)`` are valid and compacted to the front; rows beyond
+    are padding (their contents are ignored by all operators);
+  * heterogeneous dtypes across columns, homogeneous within a column — the
+    paper's definition of a table;
+  * variable-width data (strings) are dictionary-encoded into fixed-width
+    integer id columns (the standard static-shape encoding).
+
+``Table`` is a single-shard (local) table; :class:`DistTable` is the
+row-partitioned distributed form (paper §IV-B: "most of the time, data
+processing systems work on tables distributed with row-based partitioning").
+Both are pytrees, so tables flow through ``jax.jit`` / ``shard_map`` like any
+tensor — this is what lets table operators and tensor operators compose in a
+single compiled program (the HPTMT thesis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .context import HPTMTContext
+
+Columns = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# hashing (order must match kernels/hash_partition)
+# ---------------------------------------------------------------------------
+_H1_INIT = np.uint32(0x9E3779B9)
+_H2_INIT = np.uint32(0x85EBCA6B)
+_MUL1 = np.uint32(0xCC9E2D51)
+_MUL2 = np.uint32(0x1B873593)
+
+
+def _as_u32(col: jnp.ndarray) -> jnp.ndarray:
+    """Bit-stable 32-bit view of a column for hashing."""
+    if col.dtype == jnp.bool_:
+        return col.astype(jnp.uint32)
+    if jnp.issubdtype(col.dtype, jnp.floating):
+        col = col.astype(jnp.float32)
+        return jax.lax.bitcast_convert_type(col, jnp.uint32)
+    return col.astype(jnp.uint32)
+
+
+def _mix(h: jnp.ndarray, k: jnp.ndarray, mul: np.uint32) -> jnp.ndarray:
+    k = (k * mul)
+    k = (k << 15) | (k >> 17)
+    h = h ^ k
+    h = (h << 13) | (h >> 19)
+    return h * np.uint32(5) + np.uint32(0xE6546B64)
+
+
+def hash_columns(cols: Sequence[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two independent 32-bit hashes per row (≈64-bit identity)."""
+    n = cols[0].shape[0]
+    h1 = jnp.full((n,), _H1_INIT, dtype=jnp.uint32)
+    h2 = jnp.full((n,), _H2_INIT, dtype=jnp.uint32)
+    for c in cols:
+        k = _as_u32(c)
+        h1 = _mix(h1, k, _MUL1)
+        h2 = _mix(h2, k ^ np.uint32(0xDEADBEEF), _MUL2)
+    # final avalanche
+    h1 = h1 ^ (h1 >> 16)
+    h2 = h2 ^ (h2 >> 16)
+    return h1, h2
+
+
+# ---------------------------------------------------------------------------
+# local Table
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+class Table:
+    """A local columnar table with static capacity and dynamic row count."""
+
+    def __init__(self, columns: Columns, num_rows: jnp.ndarray):
+        if not columns:
+            raise ValueError("Table needs at least one column")
+        caps = {v.shape[0] for v in columns.values()}
+        if len(caps) != 1:
+            raise ValueError(f"column capacities differ: {caps}")
+        self.columns = dict(columns)
+        self.num_rows = jnp.asarray(num_rows, dtype=jnp.int32)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_arrays(cls, columns: Columns, num_rows=None,
+                    capacity: Optional[int] = None) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        n = next(iter(cols.values())).shape[0]
+        if num_rows is None:
+            num_rows = n
+        if capacity is not None and capacity != n:
+            if capacity < n:
+                raise ValueError("capacity smaller than provided rows")
+            cols = {k: _pad_axis0(v, capacity) for k, v in cols.items()}
+        return cls(cols, jnp.asarray(num_rows, jnp.int32))
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[k] for k in names) + (self.num_rows,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-1]))
+        obj = object.__new__(cls)
+        obj.columns = cols
+        obj.num_rows = children[-1]
+        return obj
+
+    # -- properties --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def row_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.num_rows
+
+    def key_arrays(self, keys: Sequence[str]) -> Tuple[jnp.ndarray, ...]:
+        return tuple(self.columns[k] for k in keys)
+
+    # -- basic local transforms ---------------------------------------------
+    def take(self, idx: jnp.ndarray, num_rows) -> "Table":
+        cols = {k: v[idx] for k, v in self.columns.items()}
+        return Table(cols, num_rows)
+
+    def compact(self, keep_mask: jnp.ndarray) -> "Table":
+        """Keep rows where ``keep_mask`` (within valid range); re-compact."""
+        keep = keep_mask & self.row_mask()
+        order = jnp.argsort(~keep, stable=True)
+        return self.take(order, jnp.sum(keep, dtype=jnp.int32))
+
+    def with_capacity(self, capacity: int) -> "Table":
+        cols = {k: _pad_axis0(v[:capacity] if capacity < v.shape[0] else v,
+                              capacity)
+                for k, v in self.columns.items()}
+        return Table(cols, jnp.minimum(self.num_rows, capacity))
+
+    def head_np(self, n: int = 10) -> Dict[str, np.ndarray]:
+        k = int(self.num_rows)
+        return {name: np.asarray(col[:min(n, k)])
+                for name, col in self.columns.items()}
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Materialize valid rows on host (paper Fig 17 interop bridge)."""
+        k = int(self.num_rows)
+        return {name: np.asarray(col[:k]) for name, col in self.columns.items()}
+
+
+def _pad_axis0(x: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    if x.shape[0] == capacity:
+        return x
+    pad = [(0, capacity - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# distributed Table
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+class DistTable:
+    """Row-partitioned table: ``n_shards`` blocks of ``capacity`` rows each.
+
+    ``columns[k]`` has global shape ``(n_shards * capacity, ...)`` and is
+    sharded over the context's data axis; ``counts`` has shape
+    ``(n_shards,)`` giving each shard's valid-row count.  Inside a
+    ``shard_map`` region each shard sees a local ``(capacity, ...)`` block —
+    i.e. a plain :class:`Table`.
+    """
+
+    def __init__(self, columns: Columns, counts: jnp.ndarray):
+        self.columns = dict(columns)
+        self.counts = jnp.asarray(counts, jnp.int32)
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[k] for k in names) + (self.counts,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        obj = object.__new__(cls)
+        obj.columns = dict(zip(names, children[:-1]))
+        obj.counts = children[-1]
+        return obj
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0] // self.n_shards
+
+    @property
+    def column_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def num_rows(self) -> jnp.ndarray:
+        return jnp.sum(self.counts)
+
+    # -- construction ----------------------------------------------------------
+    @classmethod
+    def from_local(cls, table: Table, ctx: HPTMTContext,
+                   capacity: Optional[int] = None) -> "DistTable":
+        """Block-partition a local table's valid rows across shards."""
+        p = ctx.n_shards
+        n = table.num_rows
+        per = (n + p - 1) // p  # rows per shard (last may be short)
+        cap = capacity or -(-table.capacity // p)
+        # row r goes to shard r // per at slot r % per
+        idx = jnp.arange(p * cap, dtype=jnp.int32)
+        shard, slot = idx // cap, idx % cap
+        src = shard * per + slot
+        valid = (slot < per) & (src < n)
+        src = jnp.where(valid, src, 0)
+        cols = {k: jnp.where(
+            valid.reshape((-1,) + (1,) * (v.ndim - 1)), v[src],
+            jnp.zeros_like(v[src])) for k, v in table.columns.items()}
+        counts = jnp.clip(n - jnp.arange(p, dtype=jnp.int32) * per, 0, per)
+        counts = jnp.minimum(counts, cap).astype(jnp.int32)
+        dt = cls(cols, counts)
+        if ctx.mesh is not None:
+            dt = dt.with_sharding(ctx)
+        return dt
+
+    def with_sharding(self, ctx: HPTMTContext) -> "DistTable":
+        if ctx.mesh is None:
+            return self
+        cols = {k: jax.device_put(v, ctx.row_sharding(v.ndim))
+                for k, v in self.columns.items()}
+        counts = jax.device_put(self.counts, ctx.row_sharding(1))
+        return DistTable(cols, counts)
+
+    # -- conversion ----------------------------------------------------------
+    def shard_table(self, i: int) -> Table:
+        c = self.capacity
+        cols = {k: v[i * c:(i + 1) * c] for k, v in self.columns.items()}
+        return Table(cols, self.counts[i])
+
+    def to_local(self) -> Table:
+        """Gather all shards into one compacted local table."""
+        tables = [self.shard_table(i) for i in range(self.n_shards)]
+        total_cap = self.capacity * self.n_shards
+        out_cols = {}
+        # concatenate valid prefixes
+        for name in self.column_names:
+            pieces = [np.asarray(t.columns[name][:int(t.num_rows)])
+                      for t in tables]
+            arr = np.concatenate(pieces, axis=0) if pieces else np.zeros((0,))
+            out_cols[name] = arr
+        n = sum(int(t.num_rows) for t in tables)
+        return Table.from_arrays(
+            {k: jnp.asarray(v) for k, v in out_cols.items()},
+            num_rows=n, capacity=total_cap)
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        return self.to_local().to_numpy()

@@ -1,0 +1,677 @@
+"""Distributed table operators — paper Tables II/III and the shuffle (Fig 2).
+
+Every distributed operator is one ``shard_map`` region: local columnar
+kernels + the bucket-exchange **shuffle** primitive built on the array
+AllToAll operator (paper: "Shuffle is similar to the array AllToAll
+operation … what makes these two operations different are the data structure
+[and] how we select which values are scattered" §IV-B-1).
+
+Static-shape adaptation (DESIGN.md §2 item 1): shuffles move fixed-capacity
+buckets; per-destination counts travel in a side-channel AllToAll; overflow
+(rows that exceed bucket or output capacity) is *counted and returned* so the
+caller — per the paper's §VII-F prescription, the workflow layer — can react
+(retry with a larger capacity), instead of silently corrupting data.
+
+Operators implemented here (→ paper table):
+  select, project                          — Table II (local)
+  union, difference, cartesian             — Table II (distributed)
+  intersect, join, orderby, aggregate,
+  groupby(+aggregate)                      — Table III (distributed)
+  shuffle                                  — Fig 2 primitive
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .array_ops import spmd_allgather, spmd_allreduce, spmd_alltoall
+from .context import HPTMTContext
+from .operator import Abstraction, Style, operator
+from .table import DistTable, Table, hash_columns
+
+Cols = Dict[str, jnp.ndarray]
+
+_INT_MAX = np.int32(2**31 - 1)
+
+
+# ===========================================================================
+# shard_map plumbing
+# ===========================================================================
+def _run_sharded(ctx: HPTMTContext, impl: Callable, args, out_specs):
+    """Run ``impl(*local_args, axis=...)`` over the context's data axis.
+
+    Single-device contexts run the same impl with ``axis=None`` (collectives
+    become identities) — principle (d), same operator everywhere.
+    """
+    if not ctx.is_distributed:
+        return impl(*args, axis=None)
+    fn = ctx.shard_map(
+        functools.partial(impl, axis=ctx.data_axis),
+        in_specs=P(ctx.data_axis), out_specs=out_specs)
+    return fn(*args)
+
+
+def _local_parts(dt_cols: Cols, counts: jnp.ndarray) -> Tuple[Cols, jnp.ndarray]:
+    """Inside shard_map: per-shard column blocks + scalar count."""
+    return dt_cols, counts[0]
+
+
+def _mask_for(count: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    return jnp.arange(capacity, dtype=jnp.int32) < count
+
+
+def _compact_cols(cols: Cols, keep: jnp.ndarray,
+                  out_capacity: int) -> Tuple[Cols, jnp.ndarray, jnp.ndarray]:
+    """Move kept rows to the front; truncate to ``out_capacity``.
+
+    Returns (columns, new_count, n_truncated).
+    """
+    order = jnp.argsort(~keep, stable=True)
+    total = jnp.sum(keep, dtype=jnp.int32)
+    out = {k: v[order][:out_capacity] for k, v in cols.items()}
+    new_count = jnp.minimum(total, out_capacity).astype(jnp.int32)
+    return out, new_count, total - new_count
+
+
+def _sort_cols(cols: Cols, sort_keys: Sequence[jnp.ndarray],
+               mask: jnp.ndarray) -> Tuple[Cols, jnp.ndarray]:
+    """Sort valid rows by lexicographic keys; invalid rows go last."""
+    order = jnp.lexsort(tuple(sort_keys[::-1]) + (~mask,))
+    return {k: v[order] for k, v in cols.items()}, order
+
+
+# ===========================================================================
+# the shuffle primitive (Fig 2)
+# ===========================================================================
+def _bucket_capacity(capacity: int, n_shards: int, factor: float) -> int:
+    if n_shards == 1:
+        return capacity
+    return max(1, min(capacity, math.ceil(capacity * factor / n_shards)))
+
+
+def _exchange(cols: Cols, count: jnp.ndarray, dest: jnp.ndarray,
+              n_shards: int, bucket: int, axis: Optional[str]):
+    """Bucket rows by destination shard and AllToAll-exchange them.
+
+    Returns (received_cols, received_valid_mask, n_overflowed_send).
+    ``dest`` must be ``>= n_shards`` for invalid rows.
+    """
+    capacity = dest.shape[0]
+    # group rows by destination
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    first = jnp.searchsorted(sdest, sdest, side="left")
+    rank = jnp.arange(capacity, dtype=jnp.int32) - first.astype(jnp.int32)
+    ok = (sdest < n_shards) & (rank < bucket)
+    slot = jnp.where(ok, sdest * bucket + rank, n_shards * bucket)
+
+    send_cnt = jnp.zeros(n_shards + 1, jnp.int32).at[
+        jnp.clip(dest, 0, n_shards)].add(1)[:n_shards]
+    sent = jnp.minimum(send_cnt, bucket)
+    overflow = jnp.sum(send_cnt - sent)
+
+    bufs: Cols = {}
+    for name, col in cols.items():
+        buf = jnp.zeros((n_shards * bucket,) + col.shape[1:], col.dtype)
+        bufs[name] = buf.at[slot].set(col[order], mode="drop")
+
+    if axis is not None:
+        recv_cnt = spmd_alltoall(sent, axis)
+        bufs = {k: spmd_alltoall(v, axis) for k, v in bufs.items()}
+    else:
+        recv_cnt = sent
+
+    pos = jnp.arange(n_shards * bucket, dtype=jnp.int32)
+    valid = (pos % bucket) < recv_cnt[pos // bucket]
+    return bufs, valid, overflow
+
+
+def _shuffle_impl(cols: Cols, counts: jnp.ndarray, *, key_names, n_shards,
+                  bucket, out_capacity, axis, dest_fn=None):
+    cols, count = _local_parts(cols, counts)
+    capacity = next(iter(cols.values())).shape[0]
+    mask = _mask_for(count, capacity)
+    if dest_fn is None:
+        h1, _ = hash_columns([cols[k] for k in key_names])
+        dest = (h1 % np.uint32(n_shards)).astype(jnp.int32)
+    else:
+        dest = dest_fn(cols, mask)
+    dest = jnp.where(mask, dest, n_shards)
+    bufs, valid, ov_send = _exchange(cols, count, dest, n_shards, bucket, axis)
+    out, new_count, ov_recv = _compact_cols(bufs, valid, out_capacity)
+    overflow = ov_send + ov_recv
+    if axis is not None:
+        overflow = spmd_allreduce(overflow, axis)
+    return out, new_count[None], overflow
+
+
+@operator("table.shuffle", Abstraction.TABLE)
+def shuffle(dt: DistTable, keys: Sequence[str], *, ctx: HPTMTContext,
+            out_capacity: Optional[int] = None, bucket_factor: float = 2.0,
+            ) -> Tuple[DistTable, jnp.ndarray]:
+    """Re-distribute rows so equal keys land on the same shard (Fig 2)."""
+    n = ctx.n_shards
+    bucket = _bucket_capacity(dt.capacity, n, bucket_factor)
+    out_cap = out_capacity or dt.capacity
+    impl = functools.partial(
+        _shuffle_impl, key_names=tuple(keys), n_shards=n, bucket=bucket,
+        out_capacity=out_cap, )
+    cols, counts, overflow = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+    return DistTable(cols, counts), overflow
+
+
+# ===========================================================================
+# local operators (Table II: Select / Project)
+# ===========================================================================
+@operator("table.select", Abstraction.TABLE, distributed=False)
+def select(dt: DistTable, predicate: Callable[[Cols], jnp.ndarray], *,
+           ctx: HPTMTContext) -> DistTable:
+    """Filter rows by a per-row predicate over the columns (Table II)."""
+
+    def impl(cols, counts, *, axis):
+        cols, count = _local_parts(cols, counts)
+        cap = next(iter(cols.values())).shape[0]
+        keep = predicate(cols) & _mask_for(count, cap)
+        out, n, _ = _compact_cols(cols, keep, cap)
+        return out, n[None]
+
+    cols, counts = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
+    return DistTable(cols, counts)
+
+
+@operator("table.project", Abstraction.TABLE, distributed=False)
+def project(dt: DistTable, columns: Sequence[str], *,
+            ctx: HPTMTContext) -> DistTable:
+    """Keep only the named columns (Table II). Purely local."""
+    return DistTable({k: dt.columns[k] for k in columns}, dt.counts)
+
+
+# ===========================================================================
+# OrderBy (Table III) — distributed sample sort
+# ===========================================================================
+def _orderby_impl(cols: Cols, counts: jnp.ndarray, *, key, ascending,
+                  n_shards, bucket, out_capacity, n_samples, axis):
+    local_cols, count = _local_parts(cols, counts)
+    capacity = next(iter(local_cols.values())).shape[0]
+    mask = _mask_for(count, capacity)
+    kcol = local_cols[key]
+    skey = kcol if ascending else _negate(kcol)
+
+    # --- sample splitters -------------------------------------------------
+    stride = jnp.maximum(count // n_samples, 1)
+    sidx = jnp.minimum(jnp.arange(n_samples, dtype=jnp.int32) * stride,
+                       jnp.maximum(count - 1, 0))
+    sample = jnp.where(sidx < count, skey[sidx], _max_value(skey.dtype))
+    if axis is not None:
+        sample = spmd_allgather(sample, axis)
+    sample = jnp.sort(sample)
+    total = sample.shape[0]
+    spos = (jnp.arange(1, n_shards, dtype=jnp.int32) * total) // n_shards
+    splitters = sample[spos]
+
+    dest = jnp.searchsorted(splitters, skey, side="right").astype(jnp.int32)
+    dest = jnp.where(mask, dest, n_shards)
+    bufs, valid, ov_send = _exchange(local_cols, count, dest, n_shards,
+                                     bucket, axis)
+    out, new_count, ov_recv = _compact_cols(bufs, valid, out_capacity)
+    # local sort
+    okey = out[key] if ascending else _negate(out[key])
+    m = _mask_for(new_count, out_capacity)
+    out, _ = _sort_cols(out, [okey], m)
+    overflow = ov_send + ov_recv
+    if axis is not None:
+        overflow = spmd_allreduce(overflow, axis)
+    return out, new_count[None], overflow
+
+
+def _negate(col: jnp.ndarray) -> jnp.ndarray:
+    if jnp.issubdtype(col.dtype, jnp.unsignedinteger):
+        return jnp.iinfo(col.dtype).max - col
+    return -col
+
+
+def _max_value(dtype) -> jnp.ndarray:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+@operator("table.orderby", Abstraction.TABLE)
+def orderby(dt: DistTable, key: str, *, ctx: HPTMTContext,
+            ascending: bool = True, out_capacity: Optional[int] = None,
+            bucket_factor: float = 2.0, n_samples: int = 64,
+            ) -> Tuple[DistTable, jnp.ndarray]:
+    """Globally sort rows by ``key`` via sample sort (Table III OrderBy)."""
+    n = ctx.n_shards
+    bucket = _bucket_capacity(dt.capacity, n, bucket_factor)
+    impl = functools.partial(
+        _orderby_impl, key=key, ascending=ascending, n_shards=n,
+        bucket=bucket, out_capacity=out_capacity or dt.capacity,
+        n_samples=min(n_samples, dt.capacity))
+    cols, counts, overflow = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+    return DistTable(cols, counts), overflow
+
+
+# ===========================================================================
+# Join (Table III) — shuffle + local sort-merge
+# ===========================================================================
+def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
+                       max_matches, window, out_capacity):
+    lcap = next(iter(lcols.values())).shape[0]
+    rcap = next(iter(rcols.values())).shape[0]
+    lmask, rmask = _mask_for(ln, lcap), _mask_for(rn, rcap)
+
+    lh1, lh2 = hash_columns([lcols[k] for k in keys])
+    rh1, rh2 = hash_columns([rcols[k] for k in keys])
+    # invalid rows get MAX hash so the sorted array is truly sorted
+    # (binary search requires global sortedness, including the tail)
+    rh1 = jnp.where(rmask, rh1, jnp.uint32(0xFFFFFFFF))
+    rsorted, rorder = _sort_cols(rcols, [rh1, rh2], rmask)
+    rh1s, rh2s = rh1[rorder], rh2[rorder]
+    rvalid_s = rmask[rorder]
+
+    lo = jnp.searchsorted(rh1s, lh1, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rh1s, lh1, side="right").astype(jnp.int32)
+    cnt = hi - lo
+
+    def keys_equal(cand):
+        eq = jnp.ones((lcap,), bool)
+        for k in keys:
+            eq &= lcols[k] == rsorted[k][cand]
+        eq &= lh2 == rh2s[cand]
+        return eq
+
+    matched = jnp.zeros((lcap,), jnp.int32)
+    right_idx = jnp.full((lcap, max_matches), -1, jnp.int32)
+    rows = jnp.arange(lcap, dtype=jnp.int32)
+    for j in range(window):
+        cand = jnp.clip(lo + j, 0, rcap - 1)
+        ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
+        ok &= matched < max_matches
+        slot = jnp.clip(matched, 0, max_matches - 1)
+        cur = right_idx[rows, slot]
+        right_idx = right_idx.at[rows, slot].set(jnp.where(ok, cand, cur))
+        matched = matched + ok.astype(jnp.int32)
+
+    # expand to (lcap * max_matches) candidate output rows
+    li = jnp.repeat(rows, max_matches)
+    ri = right_idx.reshape(-1)
+    has_match = ri >= 0
+    if how == "inner":
+        keep = has_match
+    elif how == "left":
+        first = (jnp.arange(lcap * max_matches) % max_matches) == 0
+        keep = has_match | (first & lmask[li] & (matched[li] == 0))
+    else:
+        raise ValueError(f"unsupported join type {how!r}")
+
+    ri_safe = jnp.clip(ri, 0, rcap - 1)
+    out: Cols = {}
+    for k, v in lcols.items():
+        out[k] = v[li]
+    for k, v in rsorted.items():
+        if k in keys:
+            continue
+        name = k if k not in lcols else f"{k}_r"
+        gathered = v[ri_safe]
+        out[name] = jnp.where(
+            has_match.reshape((-1,) + (1,) * (gathered.ndim - 1)),
+            gathered, jnp.zeros_like(gathered))
+    out["_matched"] = has_match
+    return _compact_cols(out, keep, out_capacity)
+
+
+def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
+               n_shards, lbucket, rbucket, mid_cap_l, mid_cap_r,
+               out_capacity, axis):
+    lcols, ln = _local_parts(lc, lcnt)
+    rcols, rn = _local_parts(rc, rcnt)
+    ov = jnp.zeros((), jnp.int32)
+    if n_shards > 1:
+        # co-locate equal keys (shuffle both sides by the key hash)
+        def move(cols, count, bucket, mid_cap):
+            cap = next(iter(cols.values())).shape[0]
+            mask = _mask_for(count, cap)
+            h1, _ = hash_columns([cols[k] for k in keys])
+            dest = (h1 % np.uint32(n_shards)).astype(jnp.int32)
+            dest = jnp.where(mask, dest, n_shards)
+            bufs, valid, ov_s = _exchange(cols, count, dest, n_shards,
+                                          bucket, axis)
+            out, cnt2, ov_r = _compact_cols(bufs, valid, mid_cap)
+            return out, cnt2, ov_s + ov_r
+
+        lcols, ln, ov_l = move(lcols, ln, lbucket, mid_cap_l)
+        rcols, rn, ov_r = move(rcols, rn, rbucket, mid_cap_r)
+        ov = ov + ov_l + ov_r
+    out, cnt, ov_o = _local_sorted_join(
+        lcols, ln, rcols, rn, keys=keys, how=how, max_matches=max_matches,
+        window=window, out_capacity=out_capacity)
+    overflow = ov + ov_o
+    if axis is not None:
+        overflow = spmd_allreduce(overflow, axis)
+    return out, cnt[None], overflow
+
+
+@operator("table.join", Abstraction.TABLE)
+def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
+         ctx: HPTMTContext, how: str = "inner", max_matches: int = 1,
+         window: int = 4, out_capacity: Optional[int] = None,
+         bucket_factor: float = 2.0) -> Tuple[DistTable, jnp.ndarray]:
+    """Distributed equi-join: shuffle-by-key + local sort-merge (Table III).
+
+    ``max_matches`` bounds the join fan-out per left row (static shapes);
+    rows beyond it are counted in the returned overflow.
+    """
+    n = ctx.n_shards
+    mid_l = max(left.capacity, 1)
+    mid_r = max(right.capacity, 1)
+    impl = functools.partial(
+        _join_impl, keys=tuple(keys), how=how, max_matches=max_matches,
+        window=window, n_shards=n,
+        lbucket=_bucket_capacity(left.capacity, n, bucket_factor),
+        rbucket=_bucket_capacity(right.capacity, n, bucket_factor),
+        mid_cap_l=mid_l, mid_cap_r=mid_r,
+        out_capacity=out_capacity or mid_l * max_matches)
+    cols, counts, overflow = _run_sharded(
+        ctx, impl, (left.columns, left.counts, right.columns, right.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+    return DistTable(cols, counts), overflow
+
+
+# ===========================================================================
+# GroupBy + Aggregate (Table III)
+# ===========================================================================
+_SEGMENT_OPS = ("sum", "mean", "min", "max", "count")
+
+
+def _local_groupby(cols: Cols, count, *, keys, aggs, out_capacity):
+    from repro.kernels.segment_reduce import ops as segops
+
+    cap = next(iter(cols.values())).shape[0]
+    mask = _mask_for(count, cap)
+    key_arrays = [cols[k] for k in keys]
+    sorted_cols, order = _sort_cols(cols, key_arrays, mask)
+    smask = mask[order]
+
+    new_seg = jnp.ones((cap,), bool)
+    for k in keys:
+        col = sorted_cols[k]
+        same = col[1:] == col[:-1]
+        new_seg = new_seg & jnp.concatenate([jnp.ones((1,), bool), ~same])
+    new_seg = new_seg & smask
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    n_seg = jnp.maximum(jnp.max(jnp.where(smask, seg_id, -1)) + 1, 0)
+    seg_id = jnp.where(smask, seg_id, cap)  # sentinel bucket for invalid
+
+    out: Cols = {}
+    first_idx = jnp.argsort(~new_seg, stable=True)  # first row of each segment
+    for k in keys:
+        out[k] = sorted_cols[k][first_idx][:out_capacity]
+    ones = jnp.ones((cap,), jnp.float32)
+    seg_count = segops.segment_reduce(ones, seg_id, cap + 1, op="sum")[:cap]
+    for col_name, agg in aggs:
+        vals = sorted_cols[col_name].astype(jnp.float32)
+        label = f"{col_name}_{agg}"
+        if agg == "count":
+            out[label] = seg_count[:out_capacity]
+            continue
+        red = "sum" if agg == "mean" else agg
+        r = segops.segment_reduce(vals, seg_id, cap + 1, op=red)[:cap]
+        if agg == "mean":
+            r = r / jnp.maximum(seg_count, 1.0)
+        out[label] = r[:out_capacity]
+    # zero-fill rows beyond n_seg
+    m = _mask_for(jnp.minimum(n_seg, out_capacity), out_capacity)
+    out = {k: jnp.where(m.reshape((-1,) + (1,) * (v.ndim - 1)), v,
+                        jnp.zeros_like(v)) for k, v in out.items()}
+    return out, jnp.minimum(n_seg, out_capacity).astype(jnp.int32)
+
+
+def _groupby_impl(cols, counts, *, keys, aggs, n_shards, bucket,
+                  mid_capacity, out_capacity, axis):
+    local_cols, count = _local_parts(cols, counts)
+    ov = jnp.zeros((), jnp.int32)
+    if n_shards > 1:
+        cap = next(iter(local_cols.values())).shape[0]
+        mask = _mask_for(count, cap)
+        h1, _ = hash_columns([local_cols[k] for k in keys])
+        dest = jnp.where(mask, (h1 % np.uint32(n_shards)).astype(jnp.int32),
+                         n_shards)
+        bufs, valid, ov_s = _exchange(local_cols, count, dest, n_shards,
+                                      bucket, axis)
+        local_cols, count, ov_r = _compact_cols(bufs, valid, mid_capacity)
+        ov = ov_s + ov_r
+    out, n_seg = _local_groupby(local_cols, count, keys=keys, aggs=aggs,
+                                out_capacity=out_capacity)
+    if axis is not None:
+        ov = spmd_allreduce(ov, axis)
+    return out, n_seg[None], ov
+
+
+@operator("table.groupby", Abstraction.TABLE)
+def groupby_aggregate(dt: DistTable, keys: Sequence[str],
+                      aggs: Sequence[Tuple[str, str]], *, ctx: HPTMTContext,
+                      out_capacity: Optional[int] = None,
+                      bucket_factor: float = 2.0,
+                      ) -> Tuple[DistTable, jnp.ndarray]:
+    """GroupBy + aggregate (Table III): shuffle-by-key + segment reduce.
+
+    ``aggs`` is a list of ``(column, op)`` with op in sum/mean/min/max/count.
+    """
+    for _, a in aggs:
+        if a not in _SEGMENT_OPS:
+            raise ValueError(f"unknown aggregate {a!r}")
+    n = ctx.n_shards
+    impl = functools.partial(
+        _groupby_impl, keys=tuple(keys), aggs=tuple(aggs), n_shards=n,
+        bucket=_bucket_capacity(dt.capacity, n, bucket_factor),
+        mid_capacity=dt.capacity, out_capacity=out_capacity or dt.capacity)
+    cols, counts, overflow = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+    return DistTable(cols, counts), overflow
+
+
+@operator("table.aggregate", Abstraction.TABLE)
+def aggregate(dt: DistTable, column: str, op: str, *, ctx: HPTMTContext):
+    """Global scalar aggregate of one column (Table III Aggregate)."""
+
+    def impl(cols, counts, *, axis):
+        local_cols, count = _local_parts(cols, counts)
+        cap = next(iter(local_cols.values())).shape[0]
+        mask = _mask_for(count, cap)
+        col = local_cols[column].astype(jnp.float32)
+        if op == "sum":
+            v = jnp.sum(jnp.where(mask, col, 0.0))
+        elif op == "count":
+            v = jnp.sum(mask.astype(jnp.float32))
+        elif op == "mean":
+            v = jnp.sum(jnp.where(mask, col, 0.0))
+        elif op == "min":
+            v = jnp.min(jnp.where(mask, col, jnp.inf))
+        elif op == "max":
+            v = jnp.max(jnp.where(mask, col, -jnp.inf))
+        else:
+            raise ValueError(f"unknown aggregate {op!r}")
+        if axis is not None:
+            red = {"sum": "sum", "count": "sum", "mean": "sum",
+                   "min": "min", "max": "max"}[op]
+            v = spmd_allreduce(v, axis, op=red)
+            if op == "mean":
+                n = spmd_allreduce(jnp.sum(mask.astype(jnp.float32)), axis)
+                v = v / jnp.maximum(n, 1.0)
+        elif op == "mean":
+            v = v / jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+        return v
+
+    return _run_sharded(ctx, impl, (dt.columns, dt.counts), out_specs=P())
+
+
+# ===========================================================================
+# set operators: Union / Difference / Intersect / Cartesian (Table II/III)
+# ===========================================================================
+def _dedup_sorted(cols: Cols, h1, h2, mask):
+    """Keep the first row of every (h1, h2, full-row) duplicate group."""
+    sorted_cols, order = _sort_cols(cols, [h1, h2], mask)
+    sh1, sh2, sm = h1[order], h2[order], mask[order]
+    same_hash = jnp.concatenate([
+        jnp.zeros((1,), bool), (sh1[1:] == sh1[:-1]) & (sh2[1:] == sh2[:-1])])
+    same_row = same_hash
+    for k, v in sorted_cols.items():
+        eq = jnp.concatenate([jnp.zeros((1,), bool), v[1:] == v[:-1]])
+        same_row = same_row & eq
+    keep = sm & ~same_row
+    return sorted_cols, keep
+
+
+def _membership(a_cols: Cols, amask, b_cols: Cols, bmask, names, window=8):
+    """For each row of A: does an equal row exist in B? (hash + verify)."""
+    ah1, ah2 = hash_columns([a_cols[k] for k in names])
+    bh1, bh2 = hash_columns([b_cols[k] for k in names])
+    bh1 = jnp.where(bmask, bh1, jnp.uint32(0xFFFFFFFF))
+    bsorted, border = _sort_cols(b_cols, [bh1, bh2], bmask)
+    bh1s, bh2s, bvs = bh1[border], bh2[border], bmask[border]
+    bcap = bh1s.shape[0]
+    lo = jnp.searchsorted(bh1s, ah1, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(bh1s, ah1, side="right").astype(jnp.int32)
+    found = jnp.zeros(ah1.shape, bool)
+    for j in range(window):
+        cand = jnp.clip(lo + j, 0, bcap - 1)
+        ok = (j < hi - lo) & bvs[cand] & (ah2 == bh2s[cand])
+        for k in names:
+            ok &= a_cols[k] == bsorted[k][cand]
+        found |= ok
+    return found & amask
+
+
+def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
+                bbucket, mid_a, mid_b, out_capacity, axis):
+    acols, an = _local_parts(ac, acnt)
+    bcols, bn = _local_parts(bc, bcnt)
+    ov = jnp.zeros((), jnp.int32)
+
+    def move(cols, count, bucket, mid):
+        cap = next(iter(cols.values())).shape[0]
+        mask = _mask_for(count, cap)
+        h1, _ = hash_columns([cols[k] for k in names])
+        dest = jnp.where(mask, (h1 % np.uint32(n_shards)).astype(jnp.int32),
+                         n_shards)
+        bufs, valid, o1 = _exchange(cols, count, dest, n_shards, bucket, axis)
+        out, cnt, o2 = _compact_cols(bufs, valid, mid)
+        return out, cnt, o1 + o2
+
+    if n_shards > 1:
+        acols, an, o = move(acols, an, abucket, mid_a)
+        ov += o
+        bcols, bn, o = move(bcols, bn, bbucket, mid_b)
+        ov += o
+
+    acap = next(iter(acols.values())).shape[0]
+    bcap = next(iter(bcols.values())).shape[0]
+    amask, bmask = _mask_for(an, acap), _mask_for(bn, bcap)
+
+    if kind == "union":
+        # concat then dedup
+        cat = {k: jnp.concatenate([acols[k], bcols[k]]) for k in acols}
+        cmask = jnp.concatenate([amask, bmask])
+        h1, h2 = hash_columns([cat[k] for k in names])
+        sorted_cols, keep = _dedup_sorted(cat, h1, h2, cmask)
+        out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
+    elif kind == "difference":
+        found = _membership(acols, amask, bcols, bmask, names)
+        out, cnt, o = _compact_cols(acols, amask & ~found, out_capacity)
+    elif kind == "intersect":
+        found = _membership(acols, amask, bcols, bmask, names)
+        h1, h2 = hash_columns([acols[k] for k in names])
+        kept = amask & found
+        sorted_cols, keep = _dedup_sorted(acols, h1, h2, kept)
+        out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
+    else:
+        raise ValueError(kind)
+    ov = ov + o
+    if axis is not None:
+        ov = spmd_allreduce(ov, axis)
+    return out, cnt[None], ov
+
+
+def _make_setop(kind: str, opname: str, doc: str):
+    @operator(opname, Abstraction.TABLE)
+    def op(a: DistTable, b: DistTable, *, ctx: HPTMTContext,
+           out_capacity: Optional[int] = None, bucket_factor: float = 2.0,
+           ) -> Tuple[DistTable, jnp.ndarray]:
+        names = tuple(sorted(set(a.column_names) & set(b.column_names)))
+        if names != a.column_names or names != b.column_names:
+            raise ValueError("set operators require identical schemas")
+        n = ctx.n_shards
+        default_out = (a.capacity + b.capacity if kind == "union"
+                       else a.capacity)
+        impl = functools.partial(
+            _setop_impl, kind=kind, names=names, n_shards=n,
+            abucket=_bucket_capacity(a.capacity, n, bucket_factor),
+            bbucket=_bucket_capacity(b.capacity, n, bucket_factor),
+            mid_a=a.capacity, mid_b=b.capacity,
+            out_capacity=out_capacity or default_out)
+        cols, counts, overflow = _run_sharded(
+            ctx, impl, (a.columns, a.counts, b.columns, b.counts),
+            out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+        return DistTable(cols, counts), overflow
+
+    op.__doc__ = doc
+    op.__name__ = kind
+    return op
+
+
+union = _make_setop("union", "table.union",
+                    "Distributed Union with duplicate removal (Table II).")
+difference = _make_setop(
+    "difference", "table.difference",
+    "Rows of A with no equal row in B (Table II Difference).")
+intersect = _make_setop(
+    "intersect", "table.intersect",
+    "Deduplicated rows of A that also appear in B (Table III Intersect).")
+
+
+@operator("table.cartesian", Abstraction.TABLE)
+def cartesian(a: DistTable, b: DistTable, *, ctx: HPTMTContext,
+              out_capacity: Optional[int] = None) -> DistTable:
+    """Cartesian product (Table II): AllGather right, local cross join."""
+    n = ctx.n_shards
+
+    def impl(ac, acnt, bc, bcnt, *, axis):
+        acols, an = _local_parts(ac, acnt)
+        bcols, bn = _local_parts(bc, bcnt)
+        acap = next(iter(acols.values())).shape[0]
+        bcap = next(iter(bcols.values())).shape[0]
+        if axis is not None:
+            bcols = {k: spmd_allgather(v, axis) for k, v in bcols.items()}
+            bns = spmd_allgather(bn[None], axis)
+        else:
+            bns = bn[None]
+        bg = bcols[next(iter(bcols))].shape[0]
+        # validity of gathered right rows
+        pos = jnp.arange(bg, dtype=jnp.int32)
+        bvalid = (pos % bcap) < bns[pos // bcap]
+        li = jnp.repeat(jnp.arange(acap, dtype=jnp.int32), bg)
+        ri = jnp.tile(jnp.arange(bg, dtype=jnp.int32), acap)
+        keep = _mask_for(an, acap)[li] & bvalid[ri]
+        out = {f"a_{k}": v[li] for k, v in acols.items()}
+        out.update({f"b_{k}": v[ri] for k, v in bcols.items()})
+        cols, cnt, _ = _compact_cols(out, keep, out_capacity or acap * bg)
+        return cols, cnt[None]
+
+    cols, counts = _run_sharded(
+        ctx, impl, (a.columns, a.counts, b.columns, b.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
+    return DistTable(cols, counts)

@@ -1,0 +1,118 @@
+"""Data pipeline: HPTMT table operators feeding tensor training.
+
+This is the paper's flagship composition (Fig 14): *dataflow table
+operators* pre-process a corpus, then hand off to *array/tensor operators*
+for the numeric algorithm.  The synthetic corpus is a pair of tables —
+documents (doc_id, quality, n_tokens) and token rows (doc_id, position,
+token) — and the pipeline is
+
+    select(quality ≥ θ) → join(tokens ⋈ docs) → orderby/shuffle
+        → to_numpy() → fixed-length (tokens, labels) batches,
+
+exactly the table→tensor bridge of paper Figs 13/17.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DistTable, HPTMTContext, Table, TSet, table_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    n_docs: int = 64
+    mean_doc_len: int = 96
+    vocab_size: int = 128
+    quality_threshold: float = 0.3
+    seed: int = 0
+
+
+def synthetic_corpus(ccfg: CorpusConfig, ctx: HPTMTContext
+                     ) -> Dict[str, DistTable]:
+    """Two-table corpus: docs metadata + flat token rows."""
+    rng = np.random.default_rng(ccfg.seed)
+    lens = np.clip(rng.poisson(ccfg.mean_doc_len, ccfg.n_docs), 8, None)
+    quality = rng.uniform(size=ccfg.n_docs).astype(np.float32)
+    docs = Table.from_arrays({
+        "doc_id": jnp.arange(ccfg.n_docs, dtype=jnp.int32),
+        "quality": jnp.asarray(quality),
+        "n_tokens": jnp.asarray(lens.astype(np.int32)),
+    })
+    total = int(lens.sum())
+    doc_ids = np.repeat(np.arange(ccfg.n_docs), lens).astype(np.int32)
+    positions = np.concatenate([np.arange(l) for l in lens]).astype(np.int32)
+    # token stream with mild structure so small models can learn it
+    toks = ((doc_ids * 31 + positions * 7) % (ccfg.vocab_size - 2) + 1
+            ).astype(np.int32)
+    tokens = Table.from_arrays({
+        "doc_id": jnp.asarray(doc_ids),
+        "position": jnp.asarray(positions),
+        "token": jnp.asarray(toks),
+    })
+    p = ctx.n_shards
+    return {
+        "docs": DistTable.from_local(docs, ctx,
+                                     capacity=-(-ccfg.n_docs // p)),
+        "tokens": DistTable.from_local(tokens, ctx, capacity=-(-total // p)),
+    }
+
+
+def preprocess(corpus: Dict[str, DistTable], ccfg: CorpusConfig,
+               ctx: HPTMTContext) -> np.ndarray:
+    """Dataflow pipeline → flat curated token stream (host array)."""
+    docs = TSet.from_table(corpus["docs"], ctx)
+    tokens = TSet.from_table(corpus["tokens"], ctx,
+                             chunk_rows=max(corpus["tokens"].capacity // 4, 8))
+    good = docs.select(lambda c: c["quality"] >= ccfg.quality_threshold) \
+               .project(["doc_id", "quality"])
+    curated = tokens.join(good, keys=["doc_id"],
+                          out_capacity=corpus["tokens"].capacity)
+    result = curated.collect()
+    # global order by (doc, position) → deterministic stream
+    ordered, _ = table_ops.orderby(result, "doc_id", ctx=ctx)
+    arrs = ordered.to_numpy()
+    order = np.lexsort((arrs["position"], arrs["doc_id"]))
+    return arrs["token"][order]
+
+
+def batch_iterator(stream: np.ndarray, batch: int, seq_len: int,
+                   seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Infinite (tokens, labels) batches from a curated token stream."""
+    rng = np.random.default_rng(seed)
+    n = len(stream) - (seq_len + 1)
+    if n <= 0:
+        reps = (seq_len + 2) // max(len(stream), 1) + 1
+        stream = np.tile(stream, reps)
+        n = len(stream) - (seq_len + 1)
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        toks = np.stack([stream[s:s + seq_len] for s in starts])
+        labels = np.stack([stream[s + 1:s + seq_len + 1] for s in starts])
+        yield {"tokens": jnp.asarray(toks, jnp.int32),
+               "labels": jnp.asarray(labels, jnp.int32)}
+
+
+def make_training_data(cfg: ModelConfig, ctx: HPTMTContext, batch: int,
+                       seq_len: int, ccfg: Optional[CorpusConfig] = None,
+                       ) -> Iterator[Dict[str, jnp.ndarray]]:
+    ccfg = ccfg or CorpusConfig(vocab_size=cfg.vocab_size)
+    corpus = synthetic_corpus(ccfg, ctx)
+    stream = preprocess(corpus, ccfg, ctx)
+    base = batch_iterator(stream, batch, seq_len, seed=ccfg.seed)
+    if cfg.frontend is None and not cfg.is_encoder_decoder:
+        return base
+
+    def with_frontend():
+        rng = np.random.default_rng(ccfg.seed + 1)
+        for b in base:
+            fe = rng.normal(size=(batch, cfg.frontend_seq, cfg.d_model)
+                            ).astype(np.float32) * 0.02
+            yield {**b, "frontend": jnp.asarray(fe)}
+
+    return with_frontend()

@@ -1,0 +1,107 @@
+"""Cylon-style eager DataFrame API over the HPTMT table operators.
+
+Global-view programming (paper §V-B): the user manipulates one logical
+DataFrame; operators run SPMD over the context's mesh.  ``to_numpy()`` /
+``to_jax()`` are the zero-ceremony bridges to array-operator code
+(paper Figs 13/17 interop).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistTable, HPTMTContext, Table, table_ops
+
+
+class DataFrame:
+    def __init__(self, table: DistTable, ctx: HPTMTContext):
+        self._t = table
+        self._ctx = ctx
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_dict(cls, data: Dict[str, np.ndarray], ctx: HPTMTContext,
+                  capacity: Optional[int] = None) -> "DataFrame":
+        cols = {k: jnp.asarray(v) for k, v in data.items()}
+        t = Table.from_arrays(cols)
+        per = capacity or -(-t.capacity // ctx.n_shards)
+        return cls(DistTable.from_local(t, ctx, capacity=per), ctx)
+
+    # -- metadata ------------------------------------------------------------
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self._t.column_names
+
+    def __len__(self) -> int:
+        return int(self._t.num_rows())
+
+    @property
+    def table(self) -> DistTable:
+        return self._t
+
+    # -- relational operators (eager) ------------------------------------------
+    def select(self, predicate: Callable) -> "DataFrame":
+        return DataFrame(table_ops.select(self._t, predicate, ctx=self._ctx),
+                         self._ctx)
+
+    def project(self, cols: Sequence[str]) -> "DataFrame":
+        return DataFrame(table_ops.project(self._t, cols, ctx=self._ctx),
+                         self._ctx)
+
+    def join(self, other: "DataFrame", on: Sequence[str], how: str = "inner",
+             **kw) -> "DataFrame":
+        out, ov = table_ops.join(self._t, other._t, on, ctx=self._ctx,
+                                 how=how, **kw)
+        self._check(ov, "join")
+        return DataFrame(out, self._ctx)
+
+    def groupby(self, keys: Sequence[str],
+                aggs: Sequence[Tuple[str, str]], **kw) -> "DataFrame":
+        out, ov = table_ops.groupby_aggregate(self._t, keys, aggs,
+                                              ctx=self._ctx, **kw)
+        self._check(ov, "groupby")
+        return DataFrame(out, self._ctx)
+
+    def sort_values(self, key: str, ascending: bool = True, **kw) -> "DataFrame":
+        out, ov = table_ops.orderby(self._t, key, ctx=self._ctx,
+                                    ascending=ascending, **kw)
+        self._check(ov, "orderby")
+        return DataFrame(out, self._ctx)
+
+    def union(self, other: "DataFrame", **kw) -> "DataFrame":
+        out, ov = table_ops.union(self._t, other._t, ctx=self._ctx, **kw)
+        self._check(ov, "union")
+        return DataFrame(out, self._ctx)
+
+    def difference(self, other: "DataFrame", **kw) -> "DataFrame":
+        out, ov = table_ops.difference(self._t, other._t, ctx=self._ctx, **kw)
+        self._check(ov, "difference")
+        return DataFrame(out, self._ctx)
+
+    def intersect(self, other: "DataFrame", **kw) -> "DataFrame":
+        out, ov = table_ops.intersect(self._t, other._t, ctx=self._ctx, **kw)
+        self._check(ov, "intersect")
+        return DataFrame(out, self._ctx)
+
+    def agg(self, column: str, op: str):
+        return float(table_ops.aggregate(self._t, column, op, ctx=self._ctx))
+
+    # -- interop bridges ----------------------------------------------------
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        return self._t.to_numpy()
+
+    def to_jax(self, columns: Optional[Sequence[str]] = None) -> jnp.ndarray:
+        """Stack numeric columns into a dense (rows, cols) matrix."""
+        data = self.to_numpy()
+        cols = columns or sorted(data)
+        return jnp.stack([jnp.asarray(data[c], jnp.float32) for c in cols],
+                         axis=1)
+
+    @staticmethod
+    def _check(overflow, op: str) -> None:
+        if int(overflow) != 0:
+            raise RuntimeError(
+                f"{op}: {int(overflow)} rows overflowed static capacity — "
+                "re-run with a larger out_capacity/bucket_factor")

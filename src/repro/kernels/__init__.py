@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for HPTMT hot spots.
+
+Each kernel package has: ``kernel.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (dispatching jit'd wrapper), ``ref.py`` (pure-jnp oracle used for
+interpret-mode validation).
+"""

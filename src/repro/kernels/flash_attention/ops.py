@@ -1,0 +1,34 @@
+"""Public flash-attention entry point.
+
+Dispatch policy (see DESIGN.md): the Pallas kernel is the **TPU target**;
+on CPU (this container) the pure-jnp reference executes — it is the same
+math and is what the dry-run lowers for roofline analysis.  Tests force the
+Pallas path in interpret mode and assert allclose against the reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_len: Optional[int] = None, q_offset: int = 0,
+                    sm_scale: Optional[float] = None,
+                    force: str | None = None) -> jnp.ndarray:
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _kernel.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, kv_len=kv_len,
+            q_offset=q_offset, sm_scale=sm_scale, interpret=not _on_tpu())
+    return _ref.flash_attention(
+        q, k, v, causal=causal, window=window, kv_len=kv_len,
+        q_offset=q_offset, sm_scale=sm_scale)

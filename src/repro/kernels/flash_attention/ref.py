@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for flash attention (masked softmax attention).
+
+Semantics (must match kernel exactly):
+  * GQA: ``Hq = G * Hkv``; query head ``h`` attends kv head ``h // G``.
+  * ``kv_len``: keys at positions >= kv_len are padding (masked out).
+  * ``causal``: query at absolute position ``q_offset + i`` sees keys
+    ``<= q_offset + i`` (``q_offset`` supports decode, where a single query
+    sits at the end of a long cache).
+  * ``window``: sliding-window attention — key j visible iff
+    ``q_pos - j < window`` (Mistral-style).
+Fully-masked rows return zeros.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_len: Optional[int] = None, q_offset: int = 0,
+                    sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, Hq, Sq, D); k, v (B, Hkv, Sk, D) → (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * sm_scale
+
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    allow = jnp.ones((sq, sk), bool)
+    if kv_len is not None:
+        allow &= k_pos < kv_len
+    if causal:
+        allow &= k_pos <= q_pos
+    if window is not None:
+        allow &= (q_pos - k_pos) < window
+    s = jnp.where(allow[None, None, None], s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # fully-masked rows
+    p = jnp.exp(s - m)
+    p = jnp.where(allow[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf) / jnp.maximum(l, 1e-30)
+    o = jnp.where(l > 0, o, 0.0)
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

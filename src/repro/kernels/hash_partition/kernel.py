@@ -1,0 +1,87 @@
+"""Pallas TPU hash-partition kernel (shuffle hot loop, paper Fig 2).
+
+Fuses, per row-block: (a) the multi-column murmur-style hash chain,
+(b) destination-shard assignment ``h % P``, and (c) the per-destination
+histogram — one HBM read of the key block instead of three.  The histogram
+uses a one-hot VPU reduction with the histogram block revisited across the
+row grid (accumulation), so the row dimension is the innermost grid axis.
+
+The hash chain must match ``repro.core.table.hash_columns`` bit-for-bit —
+the pure-jnp oracle in ``ref.py`` *is* that function.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_H1_INIT = np.uint32(0x9E3779B9)
+_MUL1 = np.uint32(0xCC9E2D51)
+
+
+def _mix(h, k, mul):
+    k = k * mul
+    k = (k << 15) | (k >> 17)
+    h = h ^ k
+    h = (h << 13) | (h >> 19)
+    return h * np.uint32(5) + np.uint32(0xE6546B64)
+
+
+def _kernel(keys_ref, valid_ref, dest_ref, hist_ref, *, n_parts: int,
+            sentinel: int, n_cols: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    block_n = dest_ref.shape[0]
+    h1 = jnp.full((block_n,), _H1_INIT, jnp.uint32)
+    for c in range(n_cols):
+        h1 = _mix(h1, keys_ref[:, c], _MUL1)
+    h1 = h1 ^ (h1 >> 16)
+
+    dest = (h1 % np.uint32(n_parts)).astype(jnp.int32)
+    dest = jnp.where(valid_ref[...] != 0, dest, sentinel)
+    dest_ref[...] = dest
+
+    p_pad = hist_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (p_pad, block_n), 0)
+    onehot = rows == dest[None, :]
+    hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=1)
+
+
+def hash_partition_pallas(keys_u32: jnp.ndarray, valid: jnp.ndarray,
+                          n_parts: int, *, block_n: int = 1024,
+                          interpret: bool = False):
+    """keys_u32 (N, K) uint32, valid (N,) int32 → (dest (N,), hist (P,))."""
+    n, k = keys_u32.shape
+    n_pad = -(-n // block_n) * block_n
+    p_pad = max(8, -(-n_parts // 128) * 128)
+    keys = jnp.pad(keys_u32, ((0, n_pad - n), (0, 0)))
+    val = jnp.pad(valid.astype(jnp.int32), (0, n_pad - n))
+
+    dest, hist = pl.pallas_call(
+        functools.partial(_kernel, n_parts=n_parts, sentinel=p_pad,
+                          n_cols=k),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((p_pad,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((p_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, val)
+    # sentinel rows → n_parts (match ref convention)
+    d = jnp.where(dest[:n] == p_pad, n_parts, dest[:n])
+    return d, hist[:n_parts]

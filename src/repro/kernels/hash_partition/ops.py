@@ -1,0 +1,27 @@
+"""Public entry point for hash-partitioning (shuffle destination compute)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import _as_u32
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hash_partition(key_cols: Sequence[jnp.ndarray], n_parts: int,
+                   valid: jnp.ndarray, force: str | None = None,
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row destinations + histogram; Pallas on TPU, jnp oracle elsewhere."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        keys = jnp.stack([_as_u32(c) for c in key_cols], axis=1)
+        return _kernel.hash_partition_pallas(
+            keys, valid, n_parts, interpret=not _on_tpu())
+    return _ref.hash_partition(key_cols, n_parts, valid)

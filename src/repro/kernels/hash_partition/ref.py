@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the shuffle hash-partition (paper Fig 2 hot loop)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import hash_columns
+
+
+def hash_partition(key_cols: Sequence[jnp.ndarray], n_parts: int,
+                   valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row → destination partition + per-partition histogram.
+
+    Returns (dest (N,) int32 with invalid rows = n_parts,
+             hist (n_parts,) int32 over valid rows).
+    """
+    h1, _ = hash_columns(list(key_cols))
+    dest = (h1 % np.uint32(n_parts)).astype(jnp.int32)
+    dest = jnp.where(valid, dest, n_parts)
+    hist = jnp.zeros(n_parts + 1, jnp.int32).at[
+        jnp.clip(dest, 0, n_parts)].add(1)[:n_parts]
+    return dest, hist

@@ -1,0 +1,29 @@
+"""Public entry point for segment reduction.
+
+Dispatch: compiled Pallas kernel on TPU, pure-jnp reference elsewhere
+(the reference is itself fast XLA code on CPU).  ``force`` overrides for
+testing ("pallas" uses interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=(2,), static_argnames=("op", "force"))
+def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                   num_segments: int, op: str = "sum",
+                   force: str | None = None) -> jnp.ndarray:
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _kernel.segment_reduce_pallas(
+            values, segment_ids, num_segments, op, interpret=not _on_tpu())
+    return _ref.segment_reduce(values, segment_ids, num_segments, op)

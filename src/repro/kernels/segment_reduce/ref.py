@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for segment reduction (GroupBy-aggregate hot loop)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INITS = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                   num_segments: int, op: str = "sum") -> jnp.ndarray:
+    """Reduce ``values`` by ``segment_ids`` into ``num_segments`` buckets.
+
+    ids outside ``[0, num_segments)`` are dropped. Empty segments hold the
+    reduction identity (0 / +inf / -inf), matching ``jax.ops.segment_*``.
+    """
+    if op == "sum":
+        return jax.ops.segment_sum(values, segment_ids, num_segments)
+    if op == "min":
+        return jax.ops.segment_min(values, segment_ids, num_segments)
+    if op == "max":
+        return jax.ops.segment_max(values, segment_ids, num_segments)
+    raise ValueError(f"unknown op {op!r}")

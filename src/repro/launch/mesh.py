@@ -1,0 +1,18 @@
+"""Production mesh construction (multi-pod dry-run target).
+
+A FUNCTION, not a module constant — importing this module never touches JAX
+device state (the dry-run sets ``xla_force_host_platform_device_count``
+before any JAX initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,167 @@
+"""Mamba selective-state-space mixer (Jamba's SSM blocks).
+
+Training/prefill uses a *chunked associative scan*: an outer ``lax.scan``
+over sequence chunks carries the SSM state, and within each chunk the linear
+recurrence ``h_t = a_t · h_{t-1} + b_t`` runs as ``lax.associative_scan`` —
+this bounds the materialized (B, chunk, d_inner, N) discretization tensors
+to one chunk (the TPU VMEM/HBM-friendly adaptation; a full-sequence scan at
+500k tokens would materialize terabytes).
+
+Decode carries ``(conv_state, ssm_state)`` — O(1) per token, which is what
+makes the hybrid archs runnable at the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.axes import constrain
+
+from .layers import Params, _dense_init, init_rmsnorm, rms_norm
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = cfg.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.ssm_state_dim, cfg.ssm_conv_width
+
+
+def init_mamba(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din, dtr, n, w = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "norm": init_rmsnorm(d),
+        "in_proj": _dense_init(ks[0], (d, 2 * din)),
+        "conv_w": _dense_init(ks[1], (w, din), fan_in=w),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (din, dtr + 2 * n)),
+        "dt_proj": _dense_init(ks[3], (dtr, din)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (din,)) * 0.099 + 0.001,
+                     1e-4, None))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (din, d), fan_in=din),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along seq. x (B,S,C); w (W,C). Returns (y, state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return y + b.astype(x.dtype), new_state
+
+
+def _scan_chunk(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1. a,bx (B,L,D,N); h0 (B,D,N)."""
+    # fold h0 into the first step
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_mixer(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                mode: str = "train", cache: Optional[Params] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Pre-norm Mamba block. Returns (residual_delta, new_cache)."""
+    b, s, d = x.shape
+    din, dtr, n, w = _dims(cfg)
+    dt_ = x.dtype
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+
+    xz = xn @ params["in_proj"].astype(dt_)
+    xs, z = xz[..., :din], xz[..., din:]
+    xs = constrain(xs, "batch", "seq", "ssm_inner")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state if mode == "decode" else None)
+    xs = jax.nn.silu(xs)
+
+    dbc = xs @ params["x_proj"].astype(dt_)
+    dt_raw, bm, cm = (dbc[..., :dtr], dbc[..., dtr:dtr + n],
+                      dbc[..., dtr + n:])
+    dt_full = jax.nn.softplus(
+        (dt_raw @ params["dt_proj"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"])                                   # (B,S,Din)
+    a = -jnp.exp(params["a_log"])                              # (Din,N)
+
+    xs_f = xs.astype(jnp.float32)
+    bm_f = bm.astype(jnp.float32)
+    cm_f = cm.astype(jnp.float32)
+
+    if mode == "decode":
+        # O(1) recurrent update
+        h0 = cache["ssm"]                                       # (B,Din,N)
+        da = jnp.exp(dt_full[:, 0, :, None] * a)                # (B,Din,N)
+        dbx = (dt_full[:, 0, :, None] * bm_f[:, 0, None, :]
+               * xs_f[:, 0, :, None])
+        h = da * h0 + dbx
+        y = jnp.einsum("bdn,bn->bd", h, cm_f[:, 0])[:, None]    # (B,1,Din)
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        chunk = min(cfg.scan_chunk, s)
+        n_chunks = -(-s // chunk)
+        pad = n_chunks * chunk - s
+        if pad:
+            dt_full = jnp.pad(dt_full, ((0, 0), (0, pad), (0, 0)))
+            bm_f = jnp.pad(bm_f, ((0, 0), (0, pad), (0, 0)))
+            cm_f = jnp.pad(cm_f, ((0, 0), (0, pad), (0, 0)))
+            xs_f = jnp.pad(xs_f, ((0, 0), (0, pad), (0, 0)))
+
+        def step(h0, inp):
+            dt_c, b_c, c_c, x_c = inp                           # (B,L,·)
+            da = jnp.exp(dt_c[..., None] * a)                   # (B,L,Din,N)
+            dbx = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+            hs, h_last = _scan_chunk(da, dbx, h0)
+            y_c = jnp.einsum("bldn,bln->bld", hs, c_c)
+            return h_last, y_c
+
+        def to_chunks(t):
+            return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        h_init = jnp.zeros((b, din, n), jnp.float32)
+        if n_chunks == 1:
+            h_last, y = step(h_init, (dt_full, bm_f, cm_f, xs_f))
+            y = y[:, :s]
+        else:
+            h_last, ys = jax.lax.scan(
+                step, h_init,
+                (to_chunks(dt_full), to_chunks(bm_f), to_chunks(cm_f),
+                 to_chunks(xs_f)))
+            y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, din)[:, :s]
+        new_cache = ({"conv": new_conv, "ssm": h_last}
+                     if mode == "prefill" else None)
+
+    y = (y + xs_f[:, :s] * params["d_skip"]).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    din, _, n, w = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, w - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, n), jnp.float32),
+    }

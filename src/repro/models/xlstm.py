@@ -1,0 +1,250 @@
+"""xLSTM mixers: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM (matrix-memory LSTM) is attention-free but trainable in parallel: the
+sequence is split into chunks; within a chunk the stabilized closed form is
+two MXU matmuls (q·kᵀ weighted by gate-decay matrix, then ·v), and an outer
+``lax.scan`` carries the (C, n, m) state across chunks — O(S) total compute,
+O(1) decode state, which is why xlstm runs the ``long_500k`` cell.
+
+sLSTM keeps the scalar-memory recurrence with exponential gating and a
+recurrent gate path, so it stays a true ``lax.scan`` over time (the paper's
+sequential component).
+
+Both follow the stabilized gating of Beck et al., arXiv:2405.04517.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.axes import constrain
+
+from .layers import Params, _dense_init, init_rmsnorm, rms_norm
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    din = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    return din, nh, din // nh
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din, nh, dh = _dims(cfg)
+    ks = jax.random.split(rng, 7)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_up": _dense_init(ks[0], (d, 2 * din)),
+        "wq": _dense_init(ks[1], (din, din)),
+        "wk": _dense_init(ks[2], (din, din)),
+        "wv": _dense_init(ks[3], (din, din)),
+        "w_gates": _dense_init(ks[4], (din, 2 * nh)),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((nh,), jnp.float32),          # input gate bias
+            jnp.linspace(3.0, 6.0, nh)]),           # forget gate bias (open)
+        "out_norm": init_rmsnorm(din),
+        "w_down": _dense_init(ks[5], (din, d), fan_in=din),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_log, f_log, state):
+    """One chunk of stabilized mLSTM. q,k,v (B,H,L,D); gates (B,H,L)."""
+    bsz, nh, l, dh = q.shape
+    c0, n0, m0 = state                      # (B,H,D,D), (B,H,D), (B,H)
+    b_cum = jnp.cumsum(f_log, axis=-1)      # inclusive Σ log f
+    # intra-chunk log weights: w[t,s] = b_t - b_s + i_s  (s <= t)
+    w_log = (b_cum[..., :, None] - b_cum[..., None, :]
+             + i_log[..., None, :])
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    w_log = jnp.where(tri, w_log, -jnp.inf)
+    # stabilizer per target step
+    m_intra = jnp.max(w_log, axis=-1)                        # (B,H,L)
+    m_inter = b_cum + m0[..., None]
+    m_t = jnp.maximum(m_intra, m_inter)
+    d_mat = jnp.exp(w_log - m_t[..., None])                  # (B,H,L,L)
+    inter_w = jnp.exp(m_inter - m_t)                         # (B,H,L)
+
+    scale = dh ** -0.5
+    qk = jnp.einsum("bhld,bhsd->bhls", q, k) * scale
+    num = (jnp.einsum("bhls,bhsd->bhld", qk * d_mat, v)
+           + inter_w[..., None] * jnp.einsum("bhld,bhde->bhle", q * scale, c0))
+    den = (jnp.sum(qk * d_mat, axis=-1)
+           + inter_w * jnp.einsum("bhld,bhd->bhl", q * scale, n0))
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # state for next chunk
+    b_tot = b_cum[..., -1]                                    # (B,H)
+    m_state_intra = jnp.max(b_tot[..., None] - b_cum + i_log, axis=-1)
+    m_next = jnp.maximum(b_tot + m0, m_state_intra)
+    kv_w = jnp.exp(b_tot[..., None] - b_cum + i_log - m_next[..., None])
+    c_next = (jnp.exp(b_tot + m0 - m_next)[..., None, None] * c0
+              + jnp.einsum("bhs,bhsd,bhse->bhde", kv_w, k, v))
+    n_next = (jnp.exp(b_tot + m0 - m_next)[..., None] * n0
+              + jnp.einsum("bhs,bhsd->bhd", kv_w, k))
+    return h, (c_next, n_next, m_next)
+
+
+def mlstm_mixer(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                mode: str = "train", cache: Optional[Params] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    din, nh, dh = _dims(cfg)
+    dt = x.dtype
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+    up = xn @ params["w_up"].astype(dt)
+    a, z = up[..., :din], up[..., din:]
+
+    def heads(t):
+        return t.reshape(b, -1, nh, dh).transpose(0, 2, 1, 3)
+
+    q = heads(a @ params["wq"].astype(dt)).astype(jnp.float32)
+    k = heads(a @ params["wk"].astype(dt)).astype(jnp.float32)
+    v = heads(a @ params["wv"].astype(dt)).astype(jnp.float32)
+    gates = (a.astype(jnp.float32) @ params["w_gates"]
+             + params["b_gates"])                              # (B,S,2H)
+    i_log = gates[..., :nh].transpose(0, 2, 1)                 # (B,H,S)
+    f_log = jax.nn.log_sigmoid(gates[..., nh:]).transpose(0, 2, 1)
+
+    if mode == "decode":
+        c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+        i1, f1 = i_log[..., 0], f_log[..., 0]
+        m_t = jnp.maximum(f1 + m0, i1)
+        ip = jnp.exp(i1 - m_t)
+        fp = jnp.exp(f1 + m0 - m_t)
+        c1 = fp[..., None, None] * c0 + ip[..., None, None] * (
+            k[:, :, 0, :, None] * v[:, :, 0, None, :])
+        n1 = fp[..., None] * n0 + ip[..., None] * k[:, :, 0]
+        qs = q[:, :, 0] * dh ** -0.5
+        num = jnp.einsum("bhd,bhde->bhe", qs, c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n1)),
+                          jnp.exp(-m_t))
+        h = (num / den[..., None])[:, :, None]                 # (B,H,1,D)
+        new_cache = {"c": c1, "n": n1, "m": m_t}
+    else:
+        chunk = min(cfg.mlstm_chunk, s)
+        n_chunks = -(-s // chunk)
+        pad = n_chunks * chunk - s
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            i_log = jnp.pad(i_log, ((0, 0), (0, 0), (0, pad)),
+                            constant_values=-1e30)
+            f_log = jnp.pad(f_log, ((0, 0), (0, 0), (0, pad)))
+
+        def step(state, inp):
+            qc, kc, vc, ic, fc = inp
+            h, new_state = _mlstm_chunk(qc, kc, vc, ic, fc, state)
+            return new_state, h
+
+        def to_chunks(t):
+            tail = t.shape[3:] if t.ndim == 4 else ()
+            t = t.reshape(t.shape[:2] + (n_chunks, chunk) + tail)
+            return jnp.moveaxis(t, 2, 0)
+
+        state0 = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+                  jnp.zeros((b, nh, dh), jnp.float32),
+                  jnp.full((b, nh), -1e30, jnp.float32))
+        if n_chunks == 1:
+            state, h = step(state0, (q, k, v, i_log, f_log))
+            h = h[:, :, :s]
+        else:
+            state, hs = jax.lax.scan(
+                step, state0,
+                (to_chunks(q), to_chunks(k), to_chunks(v),
+                 to_chunks(i_log), to_chunks(f_log)))
+            h = jnp.moveaxis(hs, 0, 2).reshape(b, nh, n_chunks * chunk, dh)
+            h = h[:, :, :s]
+        new_cache = ({"c": state[0], "n": state[1], "m": state[2]}
+                     if mode == "prefill" else None)
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, -1, din).astype(dt)
+    h = rms_norm(params["out_norm"], h, cfg.norm_eps)
+    y = (h * jax.nn.silu(z)) @ params["w_down"].astype(dt)
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    _, nh, dh = _dims(cfg)
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_x": _dense_init(ks[0], (d, 4 * d)),      # i, f, z, o from input
+        "w_h": _dense_init(ks[1], (d, 4 * d)),      # recurrent path
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out_norm": init_rmsnorm(d),
+        "w_down": _dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_step(params, carry, xw):
+    """carry: (h, c, n, m) each (B,D); xw: W_x·x_t (B,4D)."""
+    h, c, n, m = carry
+    d = h.shape[-1]
+    pre = xw + h @ params["w_h"] + params["b"]
+    i_log = pre[..., :d]
+    f_log = jax.nn.log_sigmoid(pre[..., d:2 * d])
+    z = jnp.tanh(pre[..., 2 * d:3 * d])
+    o = jax.nn.sigmoid(pre[..., 3 * d:])
+    m_new = jnp.maximum(f_log + m, i_log)
+    ip = jnp.exp(i_log - m_new)
+    fp = jnp.exp(f_log + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_mixer(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                mode: str = "train", cache: Optional[Params] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    dt = x.dtype
+    xn = rms_norm(params["norm"], x, cfg.norm_eps)
+    xw = (xn @ params["w_x"].astype(dt)).astype(jnp.float32)  # (B,S,4D)
+
+    if cache is not None and mode == "decode":
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    else:
+        carry = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((b, d), -1e30, jnp.float32),)
+        carry = (carry[0], carry[1], carry[2], carry[3])
+
+    def step(cr, xt):
+        new = _slstm_step(params, cr, xt)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(dt)                           # (B,S,D)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+    h = rms_norm(params["out_norm"], h, cfg.norm_eps)
+    y = h @ params["w_down"].astype(dt)
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}

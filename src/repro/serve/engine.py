@@ -1,0 +1,97 @@
+"""Serving engine: batched prefill + lockstep decode with typed caches.
+
+Cache kinds per architecture family (DESIGN.md §4): full KV, sliding-window
+ring (SWA), MLA latent, Mamba conv+SSM state, xLSTM matrix/scalar state —
+all built by ``models.transformer.init_cache`` / prefill and stepped by the
+same ``apply_lm``.  The engine decodes all sequences in lockstep (equal
+lengths), the standard batched-serving regime the decode shape cells model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0          # 0 → greedy
+    eos_id: int = -1                  # -1 → never stop early
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill(params, tokens, frontend_embeds=None):
+        logits, cache, _ = T.apply_lm(
+            params, cfg, tokens, mode="prefill",
+            frontend_embeds=frontend_embeds, cache_len=cache_len,
+            last_logit_only=True)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, cache, token, pos, rng):
+        logits, new_cache, _ = T.apply_lm(
+            params, cfg, token, mode="decode", cache=cache,
+            positions=jnp.asarray([pos], jnp.int32).reshape(1,))
+        nxt = sample(logits[:, -1], rng)
+        return nxt, new_cache
+
+    return decode
+
+
+def sample(logits: jnp.ndarray, rng, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return jax.random.categorical(
+        rng, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
+
+
+class Engine:
+    """Simple batched generation driver over jitted prefill/decode steps."""
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        import dataclasses
+        self.cfg = dataclasses.replace(cfg, remat=False)  # no grads at serve
+        self.params = params
+        self.scfg = serve_cfg
+        self._prefill = jax.jit(make_prefill_step(self.cfg,
+                                                  serve_cfg.max_len))
+        self._decode = jax.jit(self._decode_fn)
+
+    def _decode_fn(self, params, cache, token, pos, rng):
+        logits, new_cache, _ = T.apply_lm(
+            params, self.cfg, token, mode="decode", cache=cache,
+            positions=pos.reshape(1,))
+        nxt = sample(logits[:, -1], rng, self.scfg.temperature)
+        return nxt, new_cache
+
+    def generate(self, prompts: jnp.ndarray, n_tokens: int,
+                 frontend_embeds=None, rng=None) -> np.ndarray:
+        """prompts (B, S) int32 → generated (B, n_tokens) int32."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        b, s = prompts.shape
+        prefix = (self.cfg.frontend_seq
+                  if self.cfg.frontend == "vision" else 0)
+        last_logits, cache = self._prefill(self.params, prompts,
+                                           frontend_embeds)
+        token = sample(last_logits, rng, self.scfg.temperature)
+        out = [np.asarray(token)]
+        pos = s + prefix
+        for i in range(n_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            token, cache = self._decode(
+                self.params, cache, token, jnp.asarray(pos, jnp.int32), sub)
+            out.append(np.asarray(token))
+            pos += 1
+            if self.scfg.eos_id >= 0 and np.all(out[-1] == self.scfg.eos_id):
+                break
+        return np.concatenate(out, axis=1)

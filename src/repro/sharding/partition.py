@@ -1,0 +1,227 @@
+"""Parameter partitioning: param-tree paths → PartitionSpecs.
+
+Strategy (DESIGN.md §5): FSDP (ZeRO-3) over the ``data`` axis × tensor
+parallelism over ``model`` — heads/ff/vocab/experts on ``model``, the
+d_model ("fsdp") dimension on ``data``.  Rules are *shape-validated*: if a
+dimension is not divisible by its mapped mesh axes the axis is dropped
+(e.g. kv_heads=8 on a 16-way model axis ⇒ replicated KV projections;
+mixtral's 8 experts ⇒ expert-internal TP fallback instead of EP).
+
+Everything under ``decoder``/``encoder`` is stacked with a leading
+layer-group dimension (scan-over-layers), which is never sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding import axes as axes_mod
+
+# rules keyed by (context, leaf name): logical axes per dim (unstacked shape)
+_ATTN_RULES = {
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp"),
+    "wdq": ("fsdp", None), "wuq": (None, "heads"),
+    "wdkv": ("fsdp", None), "wukv": (None, "heads"),
+}
+_MAMBA_RULES = {
+    "in_proj": ("fsdp", "ssm_inner"), "conv_w": (None, "ssm_inner"),
+    "conv_b": ("ssm_inner",), "x_proj": ("ssm_inner", None),
+    "dt_proj": (None, "ssm_inner"), "dt_bias": ("ssm_inner",),
+    "a_log": ("ssm_inner", None), "d_skip": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "fsdp"),
+}
+_XLSTM_RULES = {
+    "w_up": ("fsdp", "ssm_inner"), "wq": (None, "ssm_inner"),
+    "wk": (None, "ssm_inner"), "wv": (None, "ssm_inner"),
+    "w_gates": (None, None), "b_gates": (None,),
+    "w_down": ("ssm_inner", "fsdp"),
+    "w_x": ("fsdp", None), "w_h": (None, None), "b": (None,),
+}
+_DENSE_FFN_RULES = {
+    "w_gate": ("fsdp", "ff"), "w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp"),
+}
+_MOE_RULES = {
+    "router": ("fsdp", None),
+    "w_gate": ("expert", "fsdp", None), "w_in": ("expert", "fsdp", None),
+    "w_out": ("expert", None, "fsdp"),
+}
+_MOE_TP_RULES = {  # fallback when E doesn't divide the model axis
+    "router": ("fsdp", None),
+    "w_gate": (None, "fsdp", "ff"), "w_in": (None, "fsdp", "ff"),
+    "w_out": (None, "ff", "fsdp"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return tuple(names)
+
+
+def _axis_size(mesh: Mesh, logical: Optional[str], rules) -> int:
+    if logical is None:
+        return 1
+    mapped = rules.get(logical)
+    if mapped is None:
+        return 1
+    mapped = (mapped,) if isinstance(mapped, str) else mapped
+    return math.prod(mesh.shape.get(a, 1) for a in mapped)
+
+
+def _logical_for(names: Tuple[str, ...], shape, cfg: ModelConfig,
+                 mesh: Mesh, rules) -> Tuple[Optional[str], ...]:
+    name = names[-1]
+    stacked = any(n in ("decoder", "encoder") for n in names)
+    eff_ndim = len(shape) - (1 if stacked else 0)
+
+    if name == "embed":
+        logical = (None, "embed_d")
+    elif name == "lm_head":
+        logical = ("fsdp", "vocab")
+    elif name == "scale":
+        logical = (None,) * eff_ndim
+    elif "mixer" in names or "cross" in names:
+        # pick family by layer kind from the path
+        kind = "attn"
+        for n in names:
+            if n.startswith("layer_"):
+                i = int(n.split("_")[1])
+                kind = cfg.block_pattern[i % cfg.group_size]
+        if "cross" in names:
+            kind = "attn"
+        table = {"attn": _ATTN_RULES, "mamba": _MAMBA_RULES,
+                 "mlstm": _XLSTM_RULES, "slstm": _XLSTM_RULES}[kind]
+        logical = table.get(name, (None,) * eff_ndim)
+    elif "shared" in names:
+        logical = _DENSE_FFN_RULES.get(name, (None,) * eff_ndim)
+    elif "ffn" in names:
+        if eff_ndim == 3 or name == "router":
+            e_pad = shape[-3] if eff_ndim == 3 else 0
+            model_size = _axis_size(mesh, "expert", axes_mod.DEFAULT_RULES)
+            ep_ok = e_pad > 0 and e_pad % max(model_size, 1) == 0
+            table = _MOE_RULES if ep_ok or name == "router" else _MOE_TP_RULES
+            logical = table.get(name, (None,) * eff_ndim)
+        else:
+            logical = _DENSE_FFN_RULES.get(name, (None,) * eff_ndim)
+    else:
+        logical = (None,) * eff_ndim
+
+    if len(logical) != eff_ndim:
+        logical = (None,) * eff_ndim
+    if stacked:
+        logical = (None,) + logical
+    return logical
+
+
+def param_spec(names: Tuple[str, ...], shape, cfg: ModelConfig,
+               mesh: Mesh, rules=None) -> P:
+    rules = rules or axes_mod.DEFAULT_RULES
+    logical = _logical_for(names, shape, cfg, mesh, rules)
+    # shape-validate: drop axes that do not divide the dimension
+    parts = []
+    used = set()
+    for dim, lg in zip(shape, logical):
+        mapped = rules.get(lg) if lg else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        cand = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        cand = tuple(a for a in cand if a in mesh.axis_names
+                     and a not in used)
+        size = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        if not cand or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(cand)
+        parts.append(cand[0] if len(cand) == 1 else cand)
+    return P(*parts)
+
+
+def param_shardings(params, cfg: ModelConfig, mesh: Mesh, rules=None):
+    """Pytree of NamedShardings matching ``params``."""
+
+    def leaf(path, x):
+        spec = param_spec(_path_names(path), x.shape, cfg, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh, rules=None):
+    """Pytree of PartitionSpecs matching ``params``."""
+
+    def leaf(path, x):
+        return param_spec(_path_names(path), x.shape, cfg, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def batch_spec(mesh: Mesh, rules=None) -> P:
+    rules = rules or axes_mod.DEFAULT_RULES
+    mapped = rules.get("batch")
+    mapped = (mapped,) if isinstance(mapped, str) else tuple(mapped or ())
+    axes = tuple(a for a in mapped if a in mesh.axis_names)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh, rules=None):
+    """KV/state cache shardings: batch over DP axes, heads/L over model.
+
+    For archs whose KV-head count doesn't divide the model axis, the cache
+    *length* dimension is model-sharded instead (sequence-sharded KV).
+    """
+    rules = rules or axes_mod.DEFAULT_RULES
+    bspec = batch_spec(mesh, rules)
+    b_axes = bspec[0] if len(bspec) else None
+    model_ok = "model" in mesh.axis_names
+    msize = mesh.shape.get("model", 1)
+
+    def leaf(path, x):
+        names = _path_names(path)
+        name = names[-1]
+        # stacked leading group dim
+        if name in ("pos", "cursor"):
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "k_s", "v_s"):   # (G, B, Hkv, L, Dh|1)
+            hk = x.shape[2]
+            if model_ok and hk % msize == 0:
+                spec = P(None, b_axes, "model", None, None)
+            elif model_ok and x.shape[3] % msize == 0:
+                spec = P(None, b_axes, None, "model", None)
+            else:
+                spec = P(None, b_axes)
+            return NamedSharding(mesh, spec)
+        if name == "c_kv":              # (G, B, L, r)
+            spec = P(None, b_axes, "model" if model_ok and
+                     x.shape[2] % msize == 0 else None, None)
+            return NamedSharding(mesh, spec)
+        if name == "k_rope":            # (G, B, 1, L, rd)
+            spec = P(None, b_axes, None, "model" if model_ok and
+                     x.shape[3] % msize == 0 else None, None)
+            return NamedSharding(mesh, spec)
+        if name in ("ssm", "conv"):     # (G, B, ...) mamba states
+            # shard d_inner over model
+            din_axis = 2 if name == "ssm" else 3
+            shape = x.shape
+            spec_list = [None, b_axes] + [None] * (len(shape) - 2)
+            if model_ok and len(shape) > din_axis \
+                    and shape[din_axis] % msize == 0:
+                spec_list[din_axis] = "model"
+            return NamedSharding(mesh, P(*spec_list))
+        if name == "enc_out":           # (B, F, D)
+            return NamedSharding(mesh, P(b_axes, None, None))
+        # xlstm states (G, B, ...)
+        return NamedSharding(mesh, P(None, b_axes))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

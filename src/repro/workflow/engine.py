@@ -1,0 +1,143 @@
+"""Workflow orchestration — the paper's separation-of-concerns layer (§VII-D/E).
+
+The parallel program (operators) does the computing; the *workflow engine*
+owns scheduling, retries, and fault tolerance (§VII-F: "we can always handle
+the faults outside of the operator code").  Tasks form a DAG; completed
+tasks are journaled so a crashed run resumes from the last barrier instead
+of recomputing — the same contract a Pegasus/Kubeflow deployment gives the
+multi-pod trainer, scaled down to one process for this container.
+
+Also hosts the straggler monitor: per-step wall-time dispersion tracking
+that a production launcher would use to evict/replace slow hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    fn: Callable[..., Any]
+    deps: Sequence[str] = ()
+    retries: int = 2
+    # results of deps are passed as kwargs keyed by dep name
+
+
+class WorkflowError(RuntimeError):
+    pass
+
+
+class WorkflowEngine:
+    def __init__(self, journal_path: Optional[str] = None):
+        self.tasks: Dict[str, Task] = {}
+        self.journal_path = journal_path
+        self._done: Dict[str, bool] = {}
+        if journal_path and os.path.exists(journal_path):
+            with open(journal_path) as f:
+                self._done = json.load(f)
+
+    def add(self, task: Task) -> "WorkflowEngine":
+        if task.name in self.tasks:
+            raise ValueError(f"duplicate task {task.name}")
+        self.tasks[task.name] = task
+        return self
+
+    def _journal(self):
+        if self.journal_path:
+            tmp = self.journal_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._done, f)
+            os.replace(tmp, self.journal_path)
+
+    def run(self, context: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Execute the DAG; returns {task: result}. Resumes past journaled
+        tasks (their results must be re-derivable from ``context`` or
+        checkpoints — the HPTMT contract: state lives in checkpoints, not
+        in the workflow engine)."""
+        results: Dict[str, Any] = dict(context or {})
+        order = self._topo_order()
+        for name in order:
+            task = self.tasks[name]
+            if self._done.get(name):
+                continue
+            kwargs = {d: results.get(d) for d in task.deps}
+            err: Optional[Exception] = None
+            for attempt in range(task.retries + 1):
+                try:
+                    results[name] = task.fn(**kwargs)
+                    err = None
+                    break
+                except Exception as e:  # noqa: BLE001 — retry any failure
+                    err = e
+            if err is not None:
+                raise WorkflowError(
+                    f"task {name} failed after {task.retries + 1} attempts"
+                ) from err
+            self._done[name] = True
+            self._journal()
+        return results
+
+    def _topo_order(self) -> List[str]:
+        seen: Dict[str, int] = {}
+        order: List[str] = []
+
+        def visit(n: str):
+            state = seen.get(n, 0)
+            if state == 1:
+                raise WorkflowError(f"cycle at task {n}")
+            if state == 2:
+                return
+            seen[n] = 1
+            for d in self.tasks[n].deps:
+                if d not in self.tasks:
+                    raise WorkflowError(f"task {n} depends on unknown {d}")
+                visit(d)
+            seen[n] = 2
+            order.append(n)
+
+        for n in self.tasks:
+            visit(n)
+        return order
+
+
+class StragglerMonitor:
+    """Flags steps (or peers) whose wall time exceeds k× the running median.
+
+    On a real pod this drives re-scheduling / hot-spare swap; here it feeds
+    trainer logs and is unit-tested against synthetic timings.
+    """
+
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self.samples: List[float] = []
+        self.flagged: List[int] = []
+        self._i = 0
+
+    def record(self, seconds: float) -> bool:
+        self.samples.append(seconds)
+        if len(self.samples) > self.window:
+            self.samples.pop(0)
+        slow = False
+        if len(self.samples) >= 5:
+            srt = sorted(self.samples)
+            median = srt[len(srt) // 2]
+            slow = seconds > self.threshold * median
+        if slow:
+            self.flagged.append(self._i)
+        self._i += 1
+        return slow
+
+
+class Stopwatch:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

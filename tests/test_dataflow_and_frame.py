@@ -1,0 +1,97 @@
+"""Dataflow (TSet) streaming semantics + DataFrame API + data pipeline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DistTable, Table, TSet, local_context
+from repro.dataframe.frame import DataFrame
+
+CTX = local_context()
+
+
+def _dt(cols, **kw):
+    return DistTable.from_local(
+        Table.from_arrays({k: jnp.asarray(v) for k, v in cols.items()}),
+        CTX, **kw)
+
+
+def test_chunked_equals_eager_groupby():
+    """Dataflow (piecewise + combiner) == eager whole-table result."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 8, 64).astype(np.int32)
+    vals = rng.normal(size=64).astype(np.float32)
+    dt = _dt({"k": keys, "v": vals})
+    eager = DataFrame(dt, CTX).groupby(["k"], [("v", "sum"), ("v", "mean")])
+    stream = (TSet.from_table(dt, CTX, chunk_rows=16)
+              .groupby(["k"], [("v", "sum"), ("v", "mean")]).collect())
+    a, b = eager.to_numpy(), stream.to_numpy()
+    oa, ob = np.argsort(a["k"]), np.argsort(b["k"])
+    np.testing.assert_array_equal(a["k"][oa], b["k"][ob])
+    np.testing.assert_allclose(a["v_sum"][oa], b["v_sum"][ob], rtol=1e-4)
+    np.testing.assert_allclose(a["v_mean"][oa], b["v_mean"][ob], rtol=1e-4)
+
+
+def test_streaming_select_is_piecewise():
+    dt = _dt({"x": np.arange(100, dtype=np.int32)})
+    ts = TSet.from_table(dt, CTX, chunk_rows=10)
+    out = ts.select(lambda c: c["x"] % 3 == 0).collect()
+    got = np.sort(out.to_numpy()["x"])
+    np.testing.assert_array_equal(got, np.arange(0, 100, 3))
+
+
+def test_streaming_reduce():
+    dt = _dt({"x": np.arange(50, dtype=np.float32)})
+    total = TSet.from_table(dt, CTX, chunk_rows=7).reduce("x", "sum")
+    assert float(total) == pytest.approx(np.arange(50).sum())
+
+
+def test_dataflow_join_and_numpy_bridge():
+    docs = _dt({"doc": np.array([0, 1, 2], np.int32),
+                "q": np.array([0.9, 0.1, 0.8], np.float32)})
+    toks = _dt({"doc": np.repeat([0, 1, 2], 4).astype(np.int32),
+                "tok": np.arange(12, dtype=np.int32)})
+    good = TSet.from_table(docs, CTX).select(lambda c: c["q"] > 0.5)
+    joined = TSet.from_table(toks, CTX, chunk_rows=6).join(
+        good, keys=["doc"], out_capacity=16)
+    arrs = joined.to_numpy()      # Fig 13/17 bridge
+    assert sorted(set(arrs["doc"].tolist())) == [0, 2]
+    assert len(arrs["tok"]) == 8
+
+
+def test_dataframe_api_roundtrip():
+    df = DataFrame.from_dict(
+        {"id": np.array([3, 1, 2], np.int32),
+         "v": np.array([30., 10., 20.], np.float32)}, CTX)
+    assert len(df) == 3
+    srt = df.sort_values("id")
+    np.testing.assert_array_equal(srt.to_numpy()["id"], [1, 2, 3])
+    assert df.agg("v", "sum") == pytest.approx(60.0)
+    mat = df.to_jax(["id", "v"])
+    assert mat.shape == (3, 2)
+
+
+def test_dataframe_overflow_raises():
+    df = DataFrame.from_dict({"k": np.zeros(8, np.int32),
+                              "v": np.arange(8, np.float32)
+                              if False else np.arange(8).astype(np.float32)},
+                             CTX)
+    other = DataFrame.from_dict({"k": np.zeros(8, np.int32),
+                                 "w": np.ones(8, np.float32)}, CTX)
+    with pytest.raises(RuntimeError, match="overflow"):
+        # every row matches every row (8×8=64) but out_capacity=4
+        df.join(other, on=["k"], max_matches=8, out_capacity=4)
+
+
+def test_data_pipeline_end_to_end():
+    from repro.data.pipeline import CorpusConfig, make_training_data
+    from repro.configs import get_config, reduced_config
+    cfg = reduced_config(get_config("smollm-360m"))
+    it = make_training_data(cfg, CTX, batch=2, seq_len=16,
+                            ccfg=CorpusConfig(n_docs=16, mean_doc_len=24,
+                                              vocab_size=cfg.vocab_size))
+    batch = next(it)
+    assert batch["tokens"].shape == (2, 16)
+    assert batch["labels"].shape == (2, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][0, 1:]),
+                                  np.asarray(batch["labels"][0, :-1]))

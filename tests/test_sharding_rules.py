@@ -1,0 +1,118 @@
+"""Partitioning rules: shape-validated specs on an abstract production mesh
+(no devices needed — AbstractMesh supplies axis names/sizes only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.sharding import axes as am
+from repro.sharding.partition import param_spec
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MP_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def spec(names, shape, arch="deepseek-67b", mesh=MESH):
+    return param_spec(tuple(names), tuple(shape), get_config(arch), mesh)
+
+
+def test_attention_tp_fsdp():
+    cfg = get_config("deepseek-67b")
+    # wq (D, H*Dh): fsdp × heads — 64 heads divide 16
+    s = spec(["decoder", "layer_0", "mixer", "wq"], (19, 8192, 8192))
+    assert s == P(None, "data", "model")
+    # wk: the flattened kv projection dim (8 kv × 128 dh = 1024) divides the
+    # model axis, so the parameter shards even though 8 heads alone wouldn't
+    s = spec(["decoder", "layer_0", "mixer", "wk"], (19, 8192, 1024))
+    assert s == P(None, "data", "model")
+    # wo transposed placement
+    s = spec(["decoder", "layer_0", "mixer", "wo"], (19, 8192, 8192))
+    assert s == P(None, "model", "data")
+
+
+def test_embed_d_sharded_not_vocab():
+    s = spec(["embed"], (102400, 8192))
+    assert s == P(None, "model")
+    s = spec(["lm_head"], (8192, 102400))
+    assert s == P("data", "model")
+
+
+def test_moe_ep_vs_tp_fallback():
+    # jamba: 16 experts % 16 == 0 → EP over model
+    s = spec(["decoder", "layer_1", "ffn", "w_gate"], (4, 16, 4096, 14336),
+             arch="jamba-v0.1-52b")
+    assert s[1] == "model"
+    # mixtral: 8 experts, 16-way model axis → expert-internal TP on ff
+    s = spec(["decoder", "layer_0", "ffn", "w_gate"], (32, 8, 4096, 14336),
+             arch="mixtral-8x7b")
+    assert s[1] is None and s[3] == "model"
+
+
+def test_mamba_inner_sharding():
+    s = spec(["decoder", "layer_0", "mixer", "in_proj"], (4, 4096, 16384),
+             arch="jamba-v0.1-52b")
+    assert s == P(None, "data", "model")
+    s = spec(["decoder", "layer_0", "mixer", "a_log"], (4, 8192, 16),
+             arch="jamba-v0.1-52b")
+    assert s == P(None, "model", None)
+
+
+def test_norm_scales_replicated():
+    s = spec(["decoder", "layer_0", "mixer", "norm", "scale"], (19, 8192))
+    assert s == P(None, None)
+
+
+def test_indivisible_dims_drop_axis():
+    # smollm: 15 heads × 64 dh = 960 — divisible by 16 as a flat dim, so
+    # the parameter still shards; a truly indivisible dim is dropped:
+    s = spec(["decoder", "layer_0", "mixer", "wq"], (32, 960, 960),
+             arch="smollm-360m")
+    assert s[2] == "model"
+    s = spec(["decoder", "layer_0", "mixer", "wq"], (32, 8192, 1000))
+    assert s[2] is None  # 1000 % 16 != 0 → replicated
+
+
+def test_spec_for_dedups_axes():
+    with am.logical_binding(None, {"batch": ("pod", "data"),
+                                   "heads": "model"}):
+        s = am.spec_for(["batch", "heads", None])
+        assert s == P(("pod", "data"), "model", None)
+
+
+def test_cell_rules_long_context():
+    from repro.configs import SHAPES
+    from repro.launch.cells import cell_rules
+    cfg = get_config("jamba-v0.1-52b")
+    rules = cell_rules(cfg, SHAPES["long_500k"])
+    assert rules["batch"] is None      # B=1: nothing to data-parallel
+
+
+def test_cell_skip_rules():
+    from repro.configs import SHAPES, cell_is_runnable
+    ok, _ = cell_is_runnable(get_config("deepseek-67b"), SHAPES["long_500k"])
+    assert not ok                       # pure full attention
+    ok, _ = cell_is_runnable(get_config("mixtral-8x7b"), SHAPES["long_500k"])
+    assert ok                           # SWA bounds the window
+    ok, _ = cell_is_runnable(get_config("xlstm-125m"), SHAPES["long_500k"])
+    assert ok                           # attention-free
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in ("deepseek-67b", "whisper-medium", "internvl2-76b"):
+            ok, _ = cell_is_runnable(get_config(arch), SHAPES[shape])
+            assert ok
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import parse_collectives
+    hlo = """
+      %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+      %ar = f32[256]{0} all-reduce(%y), replica_groups=[2,8]<=[16]
+      %aa = bf16[8,64]{1,0} all-to-all(%z), replica_groups={{0,1}}
+      %done = bf16[16,1024]{1,0} all-gather-done(%ag)
+    """
+    stats = parse_collectives(hlo)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "all-to-all": 1}
+    assert stats.bytes_by_kind["all-gather"] == 16 * 1024 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 4
+    assert stats.cost_s > 0

@@ -1,0 +1,77 @@
+"""End-to-end system behaviour: the paper's architecture working as a whole.
+
+The flagship test mirrors Fig 14: dataflow table operators prepare data,
+tensor operators train, the workflow engine orchestrates with fault
+tolerance — one HPTMT program.
+"""
+import numpy as np
+import pytest
+
+from repro.core import local_context
+
+
+def test_end_to_end_pipeline_train_serve(tmp_path):
+    import jax
+    from repro.configs import get_config, reduced_config
+    from repro.data.pipeline import CorpusConfig, make_training_data
+    from repro.serve.engine import Engine, ServeConfig
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import TrainConfig
+    from repro.train.trainer import LoopConfig, train_loop
+    from repro.workflow.engine import Task, WorkflowEngine
+
+    ctx = local_context()
+    cfg = reduced_config(get_config("smollm-360m"))
+    tcfg = TrainConfig(optimizer=OptimizerConfig(
+        learning_rate=3e-3, warmup_steps=2, total_steps=30))
+
+    results = {}
+
+    def prepare():
+        return make_training_data(
+            cfg, ctx, batch=4, seq_len=24,
+            ccfg=CorpusConfig(n_docs=32, mean_doc_len=48,
+                              vocab_size=cfg.vocab_size, seed=3))
+
+    def train(prepare):
+        loop = LoopConfig(total_steps=25, log_every=10,
+                          checkpoint_every=10,
+                          checkpoint_dir=str(tmp_path / "ckpt"))
+        state = train_loop(cfg, tcfg, loop, prepare, log_fn=lambda s: None)
+        from repro.train.trainer import train_loop as tl
+        results["history"] = tl.last_history
+        return state
+
+    def serve(train):
+        eng = Engine(cfg, train.params, ServeConfig(max_len=48))
+        import jax.numpy as jnp
+        prompts = jnp.asarray(
+            np.random.default_rng(0).integers(1, cfg.vocab_size, (2, 8)),
+            jnp.int32)
+        return eng.generate(prompts, n_tokens=5)
+
+    wf = WorkflowEngine(str(tmp_path / "journal.json"))
+    wf.add(Task("prepare", prepare))
+    wf.add(Task("train", train, deps=("prepare",)))
+    wf.add(Task("serve", serve, deps=("train",)))
+    out = wf.run()
+
+    hist = results["history"]
+    assert hist[-1] < hist[0], f"loss did not decrease: {hist[0]}→{hist[-1]}"
+    gen = out["serve"]
+    assert gen.shape == (2, 5)
+    assert gen.dtype == np.int32
+    assert np.all((gen >= 0) & (gen < cfg.vocab_size))
+
+
+def test_mds_composition():
+    """Paper Fig 14: table operators → distance matrix → SMACOF MDS on
+    array operators, in one program."""
+    from repro.apps.mds import mds_pipeline
+
+    ctx = local_context()
+    stress_path, embedding = mds_pipeline(n_points=24, dim=2, iters=30,
+                                          ctx=ctx, seed=0)
+    assert embedding.shape == (24, 2)
+    assert stress_path[-1] < stress_path[0] * 0.8, stress_path[::10]
+    assert np.all(np.isfinite(np.asarray(embedding)))

@@ -1,0 +1,203 @@
+"""Table operators (paper Tables II/III, Fig 1/2) vs numpy oracles,
+including hypothesis property tests on relational invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DistTable, Table, local_context, table_ops
+from repro.core.operator import Abstraction, list_operators
+
+CTX = local_context()
+
+
+def make_dt(cols, capacity=None):
+    t = Table.from_arrays({k: jnp.asarray(v) for k, v in cols.items()},
+                          capacity=capacity)
+    return DistTable.from_local(t, CTX)
+
+
+# ---------------------------------------------------------------------------
+# operator inventory — the paper's tables must be fully covered
+# ---------------------------------------------------------------------------
+def test_operator_registry_covers_paper_tables():
+    names = {o.name for o in list_operators(Abstraction.TABLE)}
+    for op in ("select", "project", "union", "difference", "cartesian",
+               "intersect", "join", "orderby", "aggregate", "groupby",
+               "shuffle"):
+        assert f"table.{op}" in names, f"missing paper operator {op}"
+    array_names = {o.name for o in list_operators(Abstraction.ARRAY)}
+    for op in ("broadcast", "gather", "allgather", "scatter", "alltoall",
+               "reduce", "allreduce", "reduce_scatter"):
+        assert f"array.{op}" in array_names
+
+
+# ---------------------------------------------------------------------------
+# unit tests
+# ---------------------------------------------------------------------------
+def test_select_project():
+    dt = make_dt({"a": np.arange(10, dtype=np.int32),
+                  "b": np.arange(10, dtype=np.float32)})
+    out = table_ops.select(dt, lambda c: c["a"] >= 5, ctx=CTX)
+    got = out.to_numpy()
+    assert np.array_equal(got["a"], np.arange(5, 10))
+    proj = table_ops.project(out, ["b"], ctx=CTX)
+    assert proj.column_names == ("b",)
+
+
+def test_join_inner_and_left():
+    l = make_dt({"k": np.array([1, 2, 3, 4], np.int32),
+                 "a": np.array([1., 2, 3, 4], np.float32)})
+    r = make_dt({"k": np.array([2, 4, 6], np.int32),
+                 "b": np.array([20., 40, 60], np.float32)})
+    inner, ov = table_ops.join(l, r, ["k"], ctx=CTX)
+    assert int(ov) == 0
+    got = inner.to_numpy()
+    order = np.argsort(got["k"])
+    assert np.array_equal(got["k"][order], [2, 4])
+    assert np.array_equal(got["b"][order], [20., 40.])
+
+    left, _ = table_ops.join(l, r, ["k"], how="left", ctx=CTX)
+    got = left.to_numpy()
+    assert len(got["k"]) == 4
+    assert np.array_equal(np.sort(got["k"]), [1, 2, 3, 4])
+    unmatched = got["b"][~got["_matched"]]
+    assert np.all(unmatched == 0)
+
+
+def test_join_duplicate_right_keys():
+    l = make_dt({"k": np.array([1, 2], np.int32),
+                 "a": np.array([1., 2.], np.float32)})
+    r = make_dt({"k": np.array([2, 2, 2], np.int32),
+                 "b": np.array([5., 6., 7.], np.float32)})
+    out, ov = table_ops.join(l, r, ["k"], max_matches=3, out_capacity=8,
+                             ctx=CTX)
+    got = out.to_numpy()
+    assert int(ov) == 0
+    assert np.array_equal(np.sort(got["b"]), [5., 6., 7.])
+    # bounded fan-out counts overflow
+    out2, ov2 = table_ops.join(l, r, ["k"], max_matches=2, out_capacity=8,
+                               ctx=CTX)
+    assert len(out2.to_numpy()["b"]) == 2
+
+
+def test_groupby_aggregate():
+    dt = make_dt({"k": np.array([3, 1, 3, 1, 3], np.int32),
+                  "v": np.array([1., 2, 3, 4, 5], np.float32)})
+    out, ov = table_ops.groupby_aggregate(
+        dt, ["k"], [("v", "sum"), ("v", "min"), ("v", "max"),
+                    ("v", "mean"), ("v", "count")], ctx=CTX)
+    got = out.to_numpy()
+    order = np.argsort(got["k"])
+    assert np.array_equal(got["k"][order], [1, 3])
+    np.testing.assert_allclose(got["v_sum"][order], [6, 9])
+    np.testing.assert_allclose(got["v_min"][order], [2, 1])
+    np.testing.assert_allclose(got["v_max"][order], [4, 5])
+    np.testing.assert_allclose(got["v_mean"][order], [3, 3])
+    np.testing.assert_allclose(got["v_count"][order], [2, 3])
+
+
+def test_orderby_desc():
+    dt = make_dt({"v": np.array([3., 1., 5., 2.], np.float32)})
+    out, _ = table_ops.orderby(dt, "v", ascending=False, ctx=CTX)
+    np.testing.assert_allclose(out.to_numpy()["v"], [5, 3, 2, 1])
+
+
+def test_cartesian():
+    a = make_dt({"x": np.array([1, 2], np.int32)})
+    b = make_dt({"y": np.array([10, 20, 30], np.int32)})
+    out = table_ops.cartesian(a, b, ctx=CTX)
+    got = out.to_numpy()
+    assert len(got["a_x"]) == 6
+    pairs = set(zip(got["a_x"].tolist(), got["b_y"].tolist()))
+    assert pairs == {(i, j) for i in (1, 2) for j in (10, 20, 30)}
+
+
+def test_aggregate_scalar():
+    dt = make_dt({"v": np.array([1., 2., 3., 4.], np.float32)})
+    assert float(table_ops.aggregate(dt, "v", "sum", ctx=CTX)) == 10.0
+    assert float(table_ops.aggregate(dt, "v", "mean", ctx=CTX)) == 2.5
+    assert float(table_ops.aggregate(dt, "v", "max", ctx=CTX)) == 4.0
+    assert float(table_ops.aggregate(dt, "v", "count", ctx=CTX)) == 4.0
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis): relational invariants
+# ---------------------------------------------------------------------------
+small_ints = st.lists(st.integers(0, 31), min_size=1, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=small_ints, b=small_ints)
+def test_union_property(a, b):
+    """union(A,B) row-set == set(A) | set(B) (paper Table II)."""
+    ta = make_dt({"x": np.array(a, np.int32)})
+    tb = make_dt({"x": np.array(b, np.int32)})
+    out, ov = table_ops.union(ta, tb, ctx=CTX)
+    assert int(ov) == 0
+    got = sorted(out.to_numpy()["x"].tolist())
+    assert got == sorted(set(a) | set(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=small_ints, b=small_ints)
+def test_difference_intersect_property(a, b):
+    ta = make_dt({"x": np.array(a, np.int32)})
+    tb = make_dt({"x": np.array(b, np.int32)})
+    diff, _ = table_ops.difference(ta, tb, ctx=CTX)
+    got = diff.to_numpy()["x"].tolist()
+    expected = [v for v in a if v not in set(b)]
+    assert sorted(got) == sorted(expected)
+    inter, _ = table_ops.intersect(ta, tb, ctx=CTX)
+    got_i = sorted(inter.to_numpy()["x"].tolist())
+    assert got_i == sorted(set(a) & set(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=st.lists(st.integers(0, 15), min_size=1, max_size=32),
+       vals=st.lists(st.floats(-100, 100, width=32), min_size=1,
+                     max_size=32))
+def test_groupby_sum_matches_numpy(keys, vals):
+    n = min(len(keys), len(vals))
+    keys, vals = np.array(keys[:n], np.int32), np.array(vals[:n], np.float32)
+    dt = make_dt({"k": keys, "v": vals})
+    out, _ = table_ops.groupby_aggregate(dt, ["k"], [("v", "sum")], ctx=CTX)
+    got = out.to_numpy()
+    expected = {k: vals[keys == k].sum() for k in set(keys.tolist())}
+    assert set(got["k"].tolist()) == set(expected)
+    for k, s in zip(got["k"], got["v_sum"]):
+        np.testing.assert_allclose(s, expected[int(k)], rtol=1e-4,
+                                   atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(st.integers(-1000, 1000), min_size=1, max_size=50))
+def test_orderby_property(vals):
+    dt = make_dt({"v": np.array(vals, np.int32)})
+    out, ov = table_ops.orderby(dt, "v", ctx=CTX)
+    assert int(ov) == 0
+    got = out.to_numpy()["v"]
+    assert np.array_equal(got, np.sort(vals))
+
+
+@settings(max_examples=20, deadline=None)
+@given(lk=st.lists(st.integers(0, 20), min_size=1, max_size=20, unique=True),
+       rk=st.lists(st.integers(0, 20), min_size=1, max_size=20, unique=True))
+def test_join_property(lk, rk):
+    l = make_dt({"k": np.array(lk, np.int32),
+                 "a": np.array(lk, np.float32)})
+    r = make_dt({"k": np.array(rk, np.int32),
+                 "b": np.array(rk, np.float32) * 2})
+    out, ov = table_ops.join(l, r, ["k"], out_capacity=64, ctx=CTX)
+    assert int(ov) == 0
+    got = sorted(out.to_numpy()["k"].tolist())
+    assert got == sorted(set(lk) & set(rk))
+
+
+def test_shuffle_preserves_rows():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100, 50).astype(np.int32)
+    dt = make_dt({"x": vals})
+    out, ov = table_ops.shuffle(dt, ["x"], ctx=CTX)
+    assert int(ov) == 0
+    assert sorted(out.to_numpy()["x"].tolist()) == sorted(vals.tolist())

@@ -1,0 +1,107 @@
+"""Training substrate: optimizer, loss, micro-batching, MoE metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   global_norm, init_opt_state, lr_schedule)
+from repro.train.train_step import (TrainConfig, cross_entropy,
+                                    init_train_state, make_train_step)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=10,
+                          total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1e-3) < 1e-9          # end of warmup
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-3)  # min lr
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[2:], lrs[3:]))  # decay
+
+
+def test_adamw_moves_against_gradient():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.ones((4, 4))}
+    state = init_opt_state(params)
+    cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=0, total_steps=10,
+                          weight_decay=0.0)
+    new, state2, m = adamw_update(cfg, params, grads, state)
+    assert np.all(np.asarray(new["w"]) < 1.0)
+    assert int(state2.count) == 1
+    assert float(m["grad_norm"]) == pytest.approx(4.0)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((10,))}
+    grads = {"w": jnp.full((10,), 100.0)}
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=0, clip_norm=1.0,
+                          weight_decay=0.0)
+    new, _, m = adamw_update(cfg, params, grads, init_opt_state(params))
+    # after clipping the update magnitude is bounded by lr (adam normalizes)
+    assert np.all(np.abs(np.asarray(new["w"])) < 1.5)
+
+
+def test_cross_entropy_matches_manual():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(2, 5, 7)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 7, (2, 5)), jnp.int32)
+    labels = labels.at[0, 0].set(-1)  # masked position
+    loss, acc = cross_entropy(logits, labels)
+    l = np.asarray(logits)
+    mask = np.asarray(labels) >= 0
+    p = np.exp(l - l.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    nll = -np.log(p[np.arange(2)[:, None], np.arange(5)[None],
+                    np.maximum(np.asarray(labels), 0)])
+    expected = (nll * mask).sum() / mask.sum()
+    assert float(loss) == pytest.approx(float(expected), rel=1e-5)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_micro_batching_matches_full_batch():
+    cfg = reduced_config(get_config("smollm-360m"))
+    tcfg1 = TrainConfig(optimizer=OptimizerConfig(warmup_steps=0),
+                        micro_batches=1)
+    tcfg4 = TrainConfig(optimizer=OptimizerConfig(warmup_steps=0),
+                        micro_batches=4)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    rng = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(rng, (8, 16), 0, cfg.vocab_size)}
+    batch["labels"] = batch["tokens"]
+    s1, m1 = jax.jit(make_train_step(cfg, tcfg1))(state, batch)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    s4, m4 = jax.jit(make_train_step(cfg, tcfg4))(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-3)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     s1.params, s4.params)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_loss_decreases_on_tiny_problem():
+    cfg = reduced_config(get_config("smollm-360m"))
+    tcfg = TrainConfig(optimizer=OptimizerConfig(
+        learning_rate=3e-3, warmup_steps=2, total_steps=40))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    rng = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}  # memorize one batch
+    losses = []
+    for _ in range(30):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_moe_metrics_present_and_dropping_bounded():
+    cfg = reduced_config(get_config("mixtral-8x7b"))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(optimizer=OptimizerConfig())
+    step = jax.jit(make_train_step(cfg, tcfg))
+    rng = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(rng, (4, 64), 0, cfg.vocab_size)
+    _, m = step(state, {"tokens": tokens, "labels": tokens})
+    assert float(m["moe_aux_loss"]) > 0
+    assert 0.0 <= float(m["moe_dropped_frac"]) < 0.5
