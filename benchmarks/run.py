@@ -8,12 +8,20 @@
   bench_lm_step       → framework: LM train/decode step (tokens/s)
   bench_kernels       → Pallas kernel interpret-mode vs ref overhead
 
-Prints ``name,us_per_call,derived`` CSV (derived = rows/s, tokens/s, …).
+Methodology: every operator case is jitted ONCE and the compiled function is
+timed with a ``block_until_ready`` per iteration — numbers are steady-state
+execution, not retrace time.  Prints ``name,us_per_call,derived`` CSV
+(derived = rows/s, tokens/s, …) and writes ``BENCH_shuffle.json`` next to
+this file so the perf trajectory is tracked across PRs.
+
 Wall times are single-host CPU numbers — scaling behaviour at pod size is
 covered by the dry-run collective analysis (EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -25,21 +33,23 @@ from repro.core import array_ops
 
 CTX = local_context()
 ROWS = []
+DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_shuffle.json")
 
 
 def _timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """µs per call of an already-jitted ``fn``, blocking every iteration."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6  # µs
 
 
 def _emit(name: str, us: float, derived: str):
-    ROWS.append(f"{name},{us:.1f},{derived}")
-    print(ROWS[-1], flush=True)
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
 
 
 def _table(n: int, n_keys: int = None, seed: int = 0) -> DistTable:
@@ -71,39 +81,47 @@ def bench_array_ops(n: int = 1 << 20):
 
 
 def bench_table_ops(n: int = 200_000):
-    """Paper Tables II/III: relational operators at n rows."""
+    """Paper Tables II/III: relational operators at n rows (pre-jitted)."""
     dt = _table(n)
     dt2 = _table(n, seed=1)
 
-    cases = [
-        ("select", lambda: table_ops.select(dt, lambda c: c["v"] > 0,
-                                            ctx=CTX)),
-        ("project", lambda: table_ops.project(dt, ["v"], ctx=CTX)),
-        ("orderby", lambda: table_ops.orderby(dt, "v", ctx=CTX)),
-        ("groupby", lambda: table_ops.groupby_aggregate(
-            dt, ["k"], [("v", "sum"), ("v", "mean")], ctx=CTX)),
-        ("aggregate", lambda: table_ops.aggregate(dt, "v", "sum", ctx=CTX)),
-        ("union", lambda: table_ops.union(dt, dt2, ctx=CTX)),
-        ("difference", lambda: table_ops.difference(dt, dt2, ctx=CTX)),
-        ("intersect", lambda: table_ops.intersect(dt, dt2, ctx=CTX)),
+    unary = [
+        ("select", jax.jit(lambda t: table_ops.select(
+            t, lambda c: c["v"] > 0, ctx=CTX))),
+        ("project", jax.jit(lambda t: table_ops.project(t, ["v"], ctx=CTX))),
+        ("orderby", jax.jit(lambda t: table_ops.orderby(t, "v", ctx=CTX))),
+        ("groupby", jax.jit(lambda t: table_ops.groupby_aggregate(
+            t, ["k"], [("v", "sum"), ("v", "mean")], ctx=CTX))),
+        ("aggregate", jax.jit(lambda t: table_ops.aggregate(
+            t, "v", "sum", ctx=CTX))),
     ]
-    for name, fn in cases:
-        us = _timeit(fn)
+    binary = [
+        ("union", jax.jit(lambda a, b: table_ops.union(a, b, ctx=CTX))),
+        ("difference", jax.jit(lambda a, b: table_ops.difference(
+            a, b, ctx=CTX))),
+        ("intersect", jax.jit(lambda a, b: table_ops.intersect(
+            a, b, ctx=CTX))),
+    ]
+    for name, jfn in unary:
+        us = _timeit(jfn, dt)
+        _emit(f"tab23_table_{name}", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+    for name, jfn in binary:
+        us = _timeit(jfn, dt, dt2)
         _emit(f"tab23_table_{name}", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
 
 
 def bench_shuffle(n: int = 500_000):
-    """Paper Fig 2: hash shuffle."""
+    """Paper Fig 2: hash shuffle (one packed AllToAll per exchange)."""
     dt = _table(n)
-    fn = lambda: table_ops.shuffle(dt, ["k"], ctx=CTX)
-    us = _timeit(fn)
+    jfn = jax.jit(lambda t: table_ops.shuffle(t, ["k"], ctx=CTX))
+    us = _timeit(jfn, dt)
     _emit("fig2_shuffle", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
 
 
-def bench_join_scaling():
+def bench_join_scaling(sizes=(50_000, 100_000, 200_000, 400_000)):
     """Paper Fig 16: join wall time while load grows (weak scaling proxy:
     rows double, per-row time should stay ~flat)."""
-    for n in (50_000, 100_000, 200_000, 400_000):
+    for n in sizes:
         rng = np.random.default_rng(0)
         lk = rng.permutation(n).astype(np.int32)
         rk = rng.permutation(n).astype(np.int32)
@@ -111,8 +129,9 @@ def bench_join_scaling():
             {"k": jnp.asarray(lk), "a": jnp.asarray(lk, jnp.float32)}), CTX)
         r = DistTable.from_local(Table.from_arrays(
             {"k": jnp.asarray(rk), "b": jnp.asarray(rk, jnp.float32)}), CTX)
-        fn = lambda: table_ops.join(l, r, ["k"], out_capacity=n, ctx=CTX)
-        us = _timeit(fn, iters=3)
+        jfn = jax.jit(lambda a, b, n=n: table_ops.join(
+            a, b, ["k"], out_capacity=n, ctx=CTX))
+        us = _timeit(jfn, l, r, iters=3)
         _emit(f"fig16_join_{n}", us, f"{n / (us * 1e-6) / 1e6:.2f}Mrow/s")
 
 
@@ -129,7 +148,6 @@ def bench_mds():
 def bench_lm_step():
     """Framework: LM train + decode step at reduced config (CPU)."""
     from repro.configs import get_config, reduced_config
-    from repro.models import transformer as T
     from repro.train.optimizer import OptimizerConfig
     from repro.train.train_step import (TrainConfig, init_train_state,
                                         make_train_step)
@@ -168,15 +186,38 @@ def bench_kernels():
     _emit("kernel_segreduce_ref_xla", us, "65k_rows")
 
 
-def main() -> None:
+def write_json(path: str) -> None:
+    """Machine-readable perf record (name → µs + derived metric)."""
+    data = {name: {"us_per_call": round(us, 1), "derived": derived}
+            for name, us, derived in ROWS}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="small sizes, shuffle-relevant benches only (CI)")
+    p.add_argument("--out", default=DEFAULT_JSON,
+                   help="path for the JSON perf record")
+    args = p.parse_args(argv)
+
     print("name,us_per_call,derived")
-    bench_array_ops()
-    bench_table_ops()
-    bench_shuffle()
-    bench_join_scaling()
-    bench_mds()
-    bench_lm_step()
-    bench_kernels()
+    if args.quick:
+        bench_table_ops(n=20_000)
+        bench_shuffle(n=50_000)
+        bench_join_scaling(sizes=(20_000, 40_000))
+    else:
+        bench_array_ops()
+        bench_table_ops()
+        bench_shuffle()
+        bench_join_scaling()
+        bench_mds()
+        bench_lm_step()
+        bench_kernels()
+    write_json(args.out)
     print(f"# {len(ROWS)} benchmarks complete")
 
 

@@ -1,0 +1,317 @@
+"""Fused single-collective row-exchange engine (shuffle hot path, Fig 2).
+
+Every distributed table operator (join, groupby, set ops, orderby) reduces
+to the shuffle primitive — re-distributing rows so related keys land on the
+same shard (paper §IV-B-1).  This module is the one implementation of that
+primitive, replacing the seed's per-column exchange with three optimisations
+(DESIGN.md §3):
+
+  1. **Packed exchange** — every column is bit-cast to ``uint32`` lanes and
+     packed into a single ``(n_shards * bucket, row_width)`` buffer, so each
+     shuffle issues exactly **one** AllToAll regardless of column count.  The
+     per-destination send counts travel in a metadata row fused into the same
+     buffer — a shuffle is ONE collective, not ``n_cols + 1``.
+  2. **Sort-free bucketing** — destination slots come from a counting-sort
+     scatter (per-destination prefix ranks + the histogram that the Pallas
+     ``hash_partition`` kernel already produces), not from ``argsort``.
+     Compaction (``compact_rows``) is likewise a cumsum scatter.  The shuffle
+     path is O(n) and contains zero ``sort`` primitives.
+  3. **Hash carrying** — the row hashes ``(h1, h2)`` computed for destination
+     assignment are threaded through the exchange as hidden columns
+     (:data:`H1_NAME` / :data:`H2_NAME`), so join / set-op kernels never
+     rehash rows after a shuffle.
+
+The static-shape overflow contract is unchanged from the seed: rows beyond a
+destination bucket (send side) or beyond ``out_capacity`` (receive side) are
+*counted and dropped*, never silently corrupted; callers surface the count so
+the workflow layer can retry with larger capacities (paper §VII-F).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .array_ops import spmd_alltoall
+
+Cols = Dict[str, jnp.ndarray]
+
+#: Reserved hidden-column names for carried row hashes.  Operator impls pop
+#: these after a shuffle instead of recomputing ``hash_columns``.
+H1_NAME = "_h1"
+H2_NAME = "_h2"
+
+
+# ===========================================================================
+# bit-exact uint32 packing
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class ColSpec:
+    """Static layout of one column inside the packed row (DESIGN.md §3.1)."""
+    name: str
+    dtype: np.dtype
+    trailing: Tuple[int, ...]
+    start: int
+    lanes: int
+
+
+def _col_to_u32(col: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact reversible view of a column as ``(cap, lanes)`` uint32."""
+    cap = col.shape[0]
+    x = col.reshape(cap, -1) if col.ndim > 1 else col.reshape(cap, 1)
+    size = jnp.dtype(x.dtype).itemsize
+    if x.dtype == jnp.bool_:
+        u = x.astype(jnp.uint32)
+    elif size == 4:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    elif size == 8:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)  # (cap, L, 2)
+    elif size == 2:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    elif size == 1:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint8).astype(jnp.uint32)
+    else:
+        raise TypeError(f"unsupported column dtype {col.dtype}")
+    return u.reshape(cap, -1)
+
+
+def _u32_to_col(u: jnp.ndarray, dtype, trailing: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of :func:`_col_to_u32`."""
+    cap = u.shape[0]
+    dt = jnp.dtype(dtype)
+    if dt == jnp.bool_:
+        x = u.astype(jnp.bool_)
+    elif dt.itemsize == 4:
+        x = jax.lax.bitcast_convert_type(u, dtype)
+    elif dt.itemsize == 8:
+        x = jax.lax.bitcast_convert_type(u.reshape(cap, -1, 2), dtype)
+    elif dt.itemsize == 2:
+        x = jax.lax.bitcast_convert_type(u.astype(jnp.uint16), dtype)
+    else:
+        x = jax.lax.bitcast_convert_type(u.astype(jnp.uint8), dtype)
+    return x.reshape((cap,) + tuple(trailing))
+
+
+def pack_columns(cols: Cols) -> Tuple[jnp.ndarray, Tuple[ColSpec, ...]]:
+    """Pack all columns into one ``(cap, row_width)`` uint32 buffer."""
+    parts, specs, start = [], [], 0
+    for name in sorted(cols):
+        u = _col_to_u32(cols[name])
+        specs.append(ColSpec(name, cols[name].dtype,
+                             tuple(cols[name].shape[1:]), start, u.shape[1]))
+        start += u.shape[1]
+        parts.append(u)
+    return jnp.concatenate(parts, axis=1), tuple(specs)
+
+
+def unpack_columns(buf: jnp.ndarray, specs: Sequence[ColSpec]) -> Cols:
+    """Recover original dtypes/shapes from a packed uint32 buffer."""
+    return {s.name: _u32_to_col(buf[:, s.start:s.start + s.lanes],
+                                s.dtype, s.trailing) for s in specs}
+
+
+# ===========================================================================
+# sort-free primitives
+# ===========================================================================
+def dest_ranks(dest: jnp.ndarray, n_parts: int,
+               chunk: int = 16) -> jnp.ndarray:
+    """Stable within-destination rank of each row (counting sort, no argsort).
+
+    ``rank[i]`` = number of earlier rows with the same destination.  Rows with
+    ``dest >= n_parts`` (invalid) get an arbitrary rank — callers mask them.
+
+    Destinations are processed in chunks of ``chunk`` so the one-hot prefix
+    buffer stays O(n * chunk) regardless of shard count (a full
+    ``(n, n_parts)`` cumsum would be a memory blowup at pod-scale meshes).
+    """
+    n = dest.shape[0]
+    rank = jnp.zeros((n,), jnp.int32)
+    for c0 in range(0, n_parts, chunk):
+        parts = jnp.arange(c0, min(c0 + chunk, n_parts), dtype=dest.dtype)
+        onehot = dest[:, None] == parts[None, :]
+        prefix = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+        idx = jnp.clip(dest.astype(jnp.int32) - c0, 0, parts.shape[0] - 1)
+        picked = jnp.take_along_axis(prefix, idx[:, None], axis=1)[:, 0]
+        in_chunk = (dest >= c0) & (dest < c0 + parts.shape[0])
+        rank = jnp.where(in_chunk, picked, rank)
+    return rank
+
+
+def compact_rows(cols: Cols, keep: jnp.ndarray,
+                 out_capacity: int) -> Tuple[Cols, jnp.ndarray, jnp.ndarray]:
+    """Move kept rows to the front (stable) via cumsum scatter; no sort.
+
+    Returns ``(columns, new_count, n_truncated)`` — rows past ``out_capacity``
+    are dropped and counted, matching the seed overflow contract.  Padding
+    rows are zero-filled (operators never read them).
+    """
+    total = jnp.sum(keep, dtype=jnp.int32)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    slot = jnp.where(keep, pos, out_capacity)  # out-of-bounds ⇒ dropped
+    out = {}
+    for k, v in cols.items():
+        buf = jnp.zeros((out_capacity,) + v.shape[1:], v.dtype)
+        out[k] = buf.at[slot].set(v, mode="drop")
+    new_count = jnp.minimum(total, out_capacity).astype(jnp.int32)
+    return out, new_count, total - new_count
+
+
+# ===========================================================================
+# the packed single-collective exchange
+# ===========================================================================
+def exchange_rows(cols: Cols, dest: jnp.ndarray, n_shards: int, bucket: int,
+                  axis: Optional[str], hist: Optional[jnp.ndarray] = None):
+    """Bucket rows by destination shard and exchange them in ONE AllToAll.
+
+    ``dest`` must be ``>= n_shards`` for invalid rows; ``hist`` is the
+    per-destination valid-row histogram (recomputed by scatter-add when not
+    supplied, e.g. by the fused ``hash_partition`` kernel).
+
+    Frame layout (DESIGN.md §3.2): per destination, ``bucket`` packed data
+    rows followed by one metadata row whose lane 0 holds the send count —
+    so counts ride the same collective as the data.
+
+    Returns ``(received_cols, received_valid_mask, n_overflowed_send)``.
+    """
+    if hist is None:
+        hist = jnp.zeros(n_shards + 1, jnp.int32).at[
+            jnp.clip(dest, 0, n_shards)].add(1)[:n_shards]
+    packed, specs = pack_columns(cols)
+    width = packed.shape[1]
+
+    rank = dest_ranks(dest, n_shards)
+    ok = (dest < n_shards) & (rank < bucket)
+    slot = jnp.where(ok, dest * bucket + rank, n_shards * bucket)
+    buf = jnp.zeros((n_shards * bucket, width), jnp.uint32
+                    ).at[slot].set(packed, mode="drop")
+
+    sent = jnp.minimum(hist, bucket)
+    overflow = jnp.sum(hist - sent)
+
+    if axis is not None:
+        meta = jnp.zeros((n_shards, 1, width), jnp.uint32
+                         ).at[:, 0, 0].set(sent.astype(jnp.uint32))
+        framed = jnp.concatenate(
+            [buf.reshape(n_shards, bucket, width), meta], axis=1)
+        recv = spmd_alltoall(framed.reshape(-1, width), axis)
+        recv = recv.reshape(n_shards, bucket + 1, width)
+        recv_cnt = recv[:, bucket, 0].astype(jnp.int32)
+        buf = recv[:, :bucket].reshape(n_shards * bucket, width)
+    else:
+        recv_cnt = sent
+
+    pos = jnp.arange(n_shards * bucket, dtype=jnp.int32)
+    valid = (pos % bucket) < recv_cnt[pos // bucket]
+    return unpack_columns(buf, specs), valid, overflow
+
+
+def hash_shuffle(cols: Cols, count: jnp.ndarray, key_names: Sequence[str],
+                 n_shards: int, bucket: int, out_capacity: int,
+                 axis: Optional[str], *, carry_hashes: bool = False):
+    """Hash-partition + packed exchange + compaction in one call.
+
+    Destination assignment and the send histogram come from the fused
+    ``hash_partition`` dispatcher (Pallas on TPU, jnp elsewhere).  With
+    ``carry_hashes`` the row hashes travel as hidden :data:`H1_NAME` /
+    :data:`H2_NAME` columns so downstream kernels skip rehashing; pop them
+    with :func:`take_hashes`.
+
+    Returns ``(columns, new_count, overflow)``.
+    """
+    from repro.kernels.hash_partition import ops as hpops  # lazy: no cycle
+
+    capacity = next(iter(cols.values())).shape[0]
+    mask = jnp.arange(capacity, dtype=jnp.int32) < count
+    key_cols = [cols[k] for k in key_names]
+    if carry_hashes:
+        clash = {H1_NAME, H2_NAME} & set(cols)
+        if clash:
+            raise ValueError(
+                f"column names {sorted(clash)} are reserved for carried "
+                f"row hashes (core/exchange.py); rename the column(s)")
+        dest, hist, h1, h2 = hpops.hash_partition(
+            key_cols, n_shards, mask, return_hashes=True)
+        cols = dict(cols)
+        cols[H1_NAME], cols[H2_NAME] = h1, h2
+    else:
+        dest, hist = hpops.hash_partition(key_cols, n_shards, mask)
+    bufs, valid, ov_send = exchange_rows(cols, dest, n_shards, bucket, axis,
+                                         hist=hist)
+    out, new_count, ov_recv = compact_rows(bufs, valid, out_capacity)
+    return out, new_count, ov_send + ov_recv
+
+
+def check_no_reserved(names: Sequence[str]) -> None:
+    """Reject user tables that use the reserved carried-hash column names."""
+    clash = {H1_NAME, H2_NAME} & set(names)
+    if clash:
+        raise ValueError(
+            f"column names {sorted(clash)} are reserved for carried row "
+            f"hashes (core/exchange.py); rename the column(s)")
+
+
+def take_hashes(cols: Cols, key_names: Sequence[str]
+                ) -> Tuple[Cols, jnp.ndarray, jnp.ndarray]:
+    """Pop carried ``(h1, h2)`` from a shuffled table, or compute them.
+
+    After a :func:`hash_shuffle` with ``carry_hashes=True`` this is a free
+    dictionary pop; on the unshuffled (single-shard) path it falls back to
+    ``hash_columns`` — same values either way.
+    """
+    from .table import hash_columns  # lazy: table does not import exchange
+
+    cols = dict(cols)
+    if H1_NAME in cols:
+        return cols, cols.pop(H1_NAME), cols.pop(H2_NAME)
+    h1, h2 = hash_columns([cols[k] for k in key_names])
+    return cols, h1, h2
+
+
+def strip_hidden(cols: Cols) -> Cols:
+    """Drop carried-hash columns before handing a table back to the user."""
+    return {k: v for k, v in cols.items()
+            if k not in (H1_NAME, H2_NAME)}
+
+
+# ===========================================================================
+# seed reference implementation (oracle for parity tests)
+# ===========================================================================
+def exchange_rows_reference(cols: Cols, dest: jnp.ndarray, n_shards: int,
+                            bucket: int, axis: Optional[str]):
+    """The seed per-column argsort exchange, kept verbatim as a test oracle.
+
+    Issues one AllToAll per column plus a count side-channel; bucketing via
+    stable ``argsort``.  Bit-for-bit equal *valid rows* to
+    :func:`exchange_rows` (padding differs: the reference leaves residual row
+    data in padding slots, the packed engine zero-fills).
+    """
+    capacity = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    first = jnp.searchsorted(sdest, sdest, side="left")
+    rank = jnp.arange(capacity, dtype=jnp.int32) - first.astype(jnp.int32)
+    ok = (sdest < n_shards) & (rank < bucket)
+    slot = jnp.where(ok, sdest * bucket + rank, n_shards * bucket)
+
+    send_cnt = jnp.zeros(n_shards + 1, jnp.int32).at[
+        jnp.clip(dest, 0, n_shards)].add(1)[:n_shards]
+    sent = jnp.minimum(send_cnt, bucket)
+    overflow = jnp.sum(send_cnt - sent)
+
+    bufs: Cols = {}
+    for name, col in cols.items():
+        buf = jnp.zeros((n_shards * bucket,) + col.shape[1:], col.dtype)
+        bufs[name] = buf.at[slot].set(col[order], mode="drop")
+
+    if axis is not None:
+        recv_cnt = spmd_alltoall(sent, axis)
+        bufs = {k: spmd_alltoall(v, axis) for k, v in bufs.items()}
+    else:
+        recv_cnt = sent
+
+    pos = jnp.arange(n_shards * bucket, dtype=jnp.int32)
+    valid = (pos % bucket) < recv_cnt[pos // bucket]
+    return bufs, valid, overflow

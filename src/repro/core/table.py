@@ -138,10 +138,16 @@ class Table:
         return Table(cols, num_rows)
 
     def compact(self, keep_mask: jnp.ndarray) -> "Table":
-        """Keep rows where ``keep_mask`` (within valid range); re-compact."""
+        """Keep rows where ``keep_mask`` (within valid range); re-compact.
+
+        Sort-free: cumsum-scatter compaction (DESIGN.md §3), stable in row
+        order; dropped slots are zero-filled padding.
+        """
+        from .exchange import compact_rows  # no import cycle: exchange
+        # has no top-level dependency on table
         keep = keep_mask & self.row_mask()
-        order = jnp.argsort(~keep, stable=True)
-        return self.take(order, jnp.sum(keep, dtype=jnp.int32))
+        cols, n, _ = compact_rows(self.columns, keep, self.capacity)
+        return Table(cols, n)
 
     def with_capacity(self, capacity: int) -> "Table":
         cols = {k: _pad_axis0(v[:capacity] if capacity < v.shape[0] else v,

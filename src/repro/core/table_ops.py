@@ -7,10 +7,17 @@ operation … what makes these two operations different are the data structure
 [and] how we select which values are scattered" §IV-B-1).
 
 Static-shape adaptation (DESIGN.md §2 item 1): shuffles move fixed-capacity
-buckets; per-destination counts travel in a side-channel AllToAll; overflow
-(rows that exceed bucket or output capacity) is *counted and returned* so the
-caller — per the paper's §VII-F prescription, the workflow layer — can react
-(retry with a larger capacity), instead of silently corrupting data.
+buckets; overflow (rows that exceed bucket or output capacity) is *counted
+and returned* so the caller — per the paper's §VII-F prescription, the
+workflow layer — can react (retry with a larger capacity), instead of
+silently corrupting data.
+
+The data movement itself lives in ``core/exchange.py`` (DESIGN.md §3): all
+columns are bit-packed into one uint32 buffer so each shuffle issues exactly
+ONE AllToAll (counts ride a fused metadata row), bucketing/compaction are
+counting-sort scatters (zero ``argsort`` on the shuffle path), and the row
+hashes computed for partitioning are carried through the exchange so join /
+set-op kernels never rehash post-shuffle.
 
 Operators implemented here (→ paper table):
   select, project                          — Table II (local)
@@ -25,19 +32,17 @@ import functools
 import math
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .array_ops import spmd_allgather, spmd_allreduce, spmd_alltoall
+from .array_ops import spmd_allgather, spmd_allreduce
 from .context import HPTMTContext
+from .exchange import (check_no_reserved, compact_rows, exchange_rows,
+                       hash_shuffle, take_hashes)
 from .operator import Abstraction, Style, operator
-from .table import DistTable, Table, hash_columns
+from .table import DistTable, Table
 
 Cols = Dict[str, jnp.ndarray]
-
-_INT_MAX = np.int32(2**31 - 1)
 
 
 # ===========================================================================
@@ -70,13 +75,10 @@ def _compact_cols(cols: Cols, keep: jnp.ndarray,
                   out_capacity: int) -> Tuple[Cols, jnp.ndarray, jnp.ndarray]:
     """Move kept rows to the front; truncate to ``out_capacity``.
 
-    Returns (columns, new_count, n_truncated).
+    Returns (columns, new_count, n_truncated).  Sort-free: delegates to the
+    exchange engine's cumsum-scatter compaction (DESIGN.md §3).
     """
-    order = jnp.argsort(~keep, stable=True)
-    total = jnp.sum(keep, dtype=jnp.int32)
-    out = {k: v[order][:out_capacity] for k, v in cols.items()}
-    new_count = jnp.minimum(total, out_capacity).astype(jnp.int32)
-    return out, new_count, total - new_count
+    return compact_rows(cols, keep, out_capacity)
 
 
 def _sort_cols(cols: Cols, sort_keys: Sequence[jnp.ndarray],
@@ -95,57 +97,20 @@ def _bucket_capacity(capacity: int, n_shards: int, factor: float) -> int:
     return max(1, min(capacity, math.ceil(capacity * factor / n_shards)))
 
 
-def _exchange(cols: Cols, count: jnp.ndarray, dest: jnp.ndarray,
-              n_shards: int, bucket: int, axis: Optional[str]):
-    """Bucket rows by destination shard and AllToAll-exchange them.
-
-    Returns (received_cols, received_valid_mask, n_overflowed_send).
-    ``dest`` must be ``>= n_shards`` for invalid rows.
-    """
-    capacity = dest.shape[0]
-    # group rows by destination
-    order = jnp.argsort(dest, stable=True)
-    sdest = dest[order]
-    first = jnp.searchsorted(sdest, sdest, side="left")
-    rank = jnp.arange(capacity, dtype=jnp.int32) - first.astype(jnp.int32)
-    ok = (sdest < n_shards) & (rank < bucket)
-    slot = jnp.where(ok, sdest * bucket + rank, n_shards * bucket)
-
-    send_cnt = jnp.zeros(n_shards + 1, jnp.int32).at[
-        jnp.clip(dest, 0, n_shards)].add(1)[:n_shards]
-    sent = jnp.minimum(send_cnt, bucket)
-    overflow = jnp.sum(send_cnt - sent)
-
-    bufs: Cols = {}
-    for name, col in cols.items():
-        buf = jnp.zeros((n_shards * bucket,) + col.shape[1:], col.dtype)
-        bufs[name] = buf.at[slot].set(col[order], mode="drop")
-
-    if axis is not None:
-        recv_cnt = spmd_alltoall(sent, axis)
-        bufs = {k: spmd_alltoall(v, axis) for k, v in bufs.items()}
-    else:
-        recv_cnt = sent
-
-    pos = jnp.arange(n_shards * bucket, dtype=jnp.int32)
-    valid = (pos % bucket) < recv_cnt[pos // bucket]
-    return bufs, valid, overflow
-
-
 def _shuffle_impl(cols: Cols, counts: jnp.ndarray, *, key_names, n_shards,
                   bucket, out_capacity, axis, dest_fn=None):
     cols, count = _local_parts(cols, counts)
-    capacity = next(iter(cols.values())).shape[0]
-    mask = _mask_for(count, capacity)
     if dest_fn is None:
-        h1, _ = hash_columns([cols[k] for k in key_names])
-        dest = (h1 % np.uint32(n_shards)).astype(jnp.int32)
+        out, new_count, overflow = hash_shuffle(
+            cols, count, key_names, n_shards, bucket, out_capacity, axis)
     else:
-        dest = dest_fn(cols, mask)
-    dest = jnp.where(mask, dest, n_shards)
-    bufs, valid, ov_send = _exchange(cols, count, dest, n_shards, bucket, axis)
-    out, new_count, ov_recv = _compact_cols(bufs, valid, out_capacity)
-    overflow = ov_send + ov_recv
+        capacity = next(iter(cols.values())).shape[0]
+        mask = _mask_for(count, capacity)
+        dest = jnp.where(mask, dest_fn(cols, mask), n_shards)
+        bufs, valid, ov_send = exchange_rows(cols, dest, n_shards, bucket,
+                                             axis)
+        out, new_count, ov_recv = compact_rows(bufs, valid, out_capacity)
+        overflow = ov_send + ov_recv
     if axis is not None:
         overflow = spmd_allreduce(overflow, axis)
     return out, new_count[None], overflow
@@ -221,9 +186,9 @@ def _orderby_impl(cols: Cols, counts: jnp.ndarray, *, key, ascending,
 
     dest = jnp.searchsorted(splitters, skey, side="right").astype(jnp.int32)
     dest = jnp.where(mask, dest, n_shards)
-    bufs, valid, ov_send = _exchange(local_cols, count, dest, n_shards,
-                                     bucket, axis)
-    out, new_count, ov_recv = _compact_cols(bufs, valid, out_capacity)
+    bufs, valid, ov_send = exchange_rows(local_cols, dest, n_shards,
+                                         bucket, axis)
+    out, new_count, ov_recv = compact_rows(bufs, valid, out_capacity)
     # local sort
     okey = out[key] if ascending else _negate(out[key])
     m = _mask_for(new_count, out_capacity)
@@ -269,41 +234,60 @@ def orderby(dt: DistTable, key: str, *, ctx: HPTMTContext,
 # ===========================================================================
 def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
                        max_matches, window, out_capacity):
+    # hashes carried through the shuffle (or computed here on the
+    # single-shard path — same values either way)
+    lcols, lh1, lh2 = take_hashes(lcols, keys)
+    rcols, rh1, rh2 = take_hashes(rcols, keys)
     lcap = next(iter(lcols.values())).shape[0]
     rcap = next(iter(rcols.values())).shape[0]
     lmask, rmask = _mask_for(ln, lcap), _mask_for(rn, rcap)
 
-    lh1, lh2 = hash_columns([lcols[k] for k in keys])
-    rh1, rh2 = hash_columns([rcols[k] for k in keys])
     # invalid rows get MAX hash so the sorted array is truly sorted
-    # (binary search requires global sortedness, including the tail)
+    # (binary search requires global sortedness, including the tail).
+    # Single-key stable sort: equal-h1 candidates are probed through the
+    # bounded window below, so no secondary sort key is needed, and only the
+    # probe-side arrays ride the sort gather — non-key output columns are
+    # gathered once through ``rorder`` at emit time.
     rh1 = jnp.where(rmask, rh1, jnp.uint32(0xFFFFFFFF))
-    rsorted, rorder = _sort_cols(rcols, [rh1, rh2], rmask)
+    rorder = jnp.argsort(rh1, stable=True)
     rh1s, rh2s = rh1[rorder], rh2[rorder]
     rvalid_s = rmask[rorder]
+    rkey_s = {k: rcols[k][rorder] for k in keys}
 
     lo = jnp.searchsorted(rh1s, lh1, side="left").astype(jnp.int32)
     hi = jnp.searchsorted(rh1s, lh1, side="right").astype(jnp.int32)
     cnt = hi - lo
 
     def keys_equal(cand):
-        eq = jnp.ones((lcap,), bool)
+        eq = lh2 == rh2s[cand]
         for k in keys:
-            eq &= lcols[k] == rsorted[k][cand]
-        eq &= lh2 == rh2s[cand]
+            eq &= lcols[k] == rkey_s[k][cand]
         return eq
 
-    matched = jnp.zeros((lcap,), jnp.int32)
-    right_idx = jnp.full((lcap, max_matches), -1, jnp.int32)
     rows = jnp.arange(lcap, dtype=jnp.int32)
-    for j in range(window):
-        cand = jnp.clip(lo + j, 0, rcap - 1)
-        ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
-        ok &= matched < max_matches
-        slot = jnp.clip(matched, 0, max_matches - 1)
-        cur = right_idx[rows, slot]
-        right_idx = right_idx.at[rows, slot].set(jnp.where(ok, cand, cur))
-        matched = matched + ok.astype(jnp.int32)
+    if max_matches == 1:
+        # scatter-free fast path: first match wins
+        ridx = jnp.full((lcap,), -1, jnp.int32)
+        found = jnp.zeros((lcap,), bool)
+        for j in range(window):
+            cand = jnp.clip(lo + j, 0, rcap - 1)
+            ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
+            ok &= ~found
+            ridx = jnp.where(ok, cand, ridx)
+            found |= ok
+        right_idx = ridx[:, None]
+        matched = found.astype(jnp.int32)
+    else:
+        matched = jnp.zeros((lcap,), jnp.int32)
+        right_idx = jnp.full((lcap, max_matches), -1, jnp.int32)
+        for j in range(window):
+            cand = jnp.clip(lo + j, 0, rcap - 1)
+            ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
+            ok &= matched < max_matches
+            slot = jnp.clip(matched, 0, max_matches - 1)
+            cur = right_idx[rows, slot]
+            right_idx = right_idx.at[rows, slot].set(jnp.where(ok, cand, cur))
+            matched = matched + ok.astype(jnp.int32)
 
     # expand to (lcap * max_matches) candidate output rows
     li = jnp.repeat(rows, max_matches)
@@ -318,14 +302,15 @@ def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
         raise ValueError(f"unsupported join type {how!r}")
 
     ri_safe = jnp.clip(ri, 0, rcap - 1)
+    rsrc = rorder[ri_safe]  # compose sort + probe gathers for output cols
     out: Cols = {}
     for k, v in lcols.items():
         out[k] = v[li]
-    for k, v in rsorted.items():
+    for k, v in rcols.items():
         if k in keys:
             continue
         name = k if k not in lcols else f"{k}_r"
-        gathered = v[ri_safe]
+        gathered = v[rsrc]
         out[name] = jnp.where(
             has_match.reshape((-1,) + (1,) * (gathered.ndim - 1)),
             gathered, jnp.zeros_like(gathered))
@@ -340,20 +325,12 @@ def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
     rcols, rn = _local_parts(rc, rcnt)
     ov = jnp.zeros((), jnp.int32)
     if n_shards > 1:
-        # co-locate equal keys (shuffle both sides by the key hash)
-        def move(cols, count, bucket, mid_cap):
-            cap = next(iter(cols.values())).shape[0]
-            mask = _mask_for(count, cap)
-            h1, _ = hash_columns([cols[k] for k in keys])
-            dest = (h1 % np.uint32(n_shards)).astype(jnp.int32)
-            dest = jnp.where(mask, dest, n_shards)
-            bufs, valid, ov_s = _exchange(cols, count, dest, n_shards,
-                                          bucket, axis)
-            out, cnt2, ov_r = _compact_cols(bufs, valid, mid_cap)
-            return out, cnt2, ov_s + ov_r
-
-        lcols, ln, ov_l = move(lcols, ln, lbucket, mid_cap_l)
-        rcols, rn, ov_r = move(rcols, rn, rbucket, mid_cap_r)
+        # co-locate equal keys; carry (h1, h2) so the local join never
+        # rehashes the shuffled rows
+        lcols, ln, ov_l = hash_shuffle(lcols, ln, keys, n_shards, lbucket,
+                                       mid_cap_l, axis, carry_hashes=True)
+        rcols, rn, ov_r = hash_shuffle(rcols, rn, keys, n_shards, rbucket,
+                                       mid_cap_r, axis, carry_hashes=True)
         ov = ov + ov_l + ov_r
     out, cnt, ov_o = _local_sorted_join(
         lcols, ln, rcols, rn, keys=keys, how=how, max_matches=max_matches,
@@ -374,6 +351,8 @@ def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
     ``max_matches`` bounds the join fan-out per left row (static shapes);
     rows beyond it are counted in the returned overflow.
     """
+    check_no_reserved(left.column_names)
+    check_no_reserved(right.column_names)
     n = ctx.n_shards
     mid_l = max(left.capacity, 1)
     mid_r = max(right.capacity, 1)
@@ -416,7 +395,11 @@ def _local_groupby(cols: Cols, count, *, keys, aggs, out_capacity):
     seg_id = jnp.where(smask, seg_id, cap)  # sentinel bucket for invalid
 
     out: Cols = {}
-    first_idx = jnp.argsort(~new_seg, stable=True)  # first row of each segment
+    # first row of each segment via counting scatter (segment ids of the
+    # boundary rows are unique), no argsort
+    first_idx = jnp.zeros((cap,), jnp.int32).at[
+        jnp.where(new_seg, seg_id, cap)].set(
+        jnp.arange(cap, dtype=jnp.int32), mode="drop")
     for k in keys:
         out[k] = sorted_cols[k][first_idx][:out_capacity]
     ones = jnp.ones((cap,), jnp.float32)
@@ -444,15 +427,8 @@ def _groupby_impl(cols, counts, *, keys, aggs, n_shards, bucket,
     local_cols, count = _local_parts(cols, counts)
     ov = jnp.zeros((), jnp.int32)
     if n_shards > 1:
-        cap = next(iter(local_cols.values())).shape[0]
-        mask = _mask_for(count, cap)
-        h1, _ = hash_columns([local_cols[k] for k in keys])
-        dest = jnp.where(mask, (h1 % np.uint32(n_shards)).astype(jnp.int32),
-                         n_shards)
-        bufs, valid, ov_s = _exchange(local_cols, count, dest, n_shards,
-                                      bucket, axis)
-        local_cols, count, ov_r = _compact_cols(bufs, valid, mid_capacity)
-        ov = ov_s + ov_r
+        local_cols, count, ov = hash_shuffle(
+            local_cols, count, keys, n_shards, bucket, mid_capacity, axis)
     out, n_seg = _local_groupby(local_cols, count, keys=keys, aggs=aggs,
                                 out_capacity=out_capacity)
     if axis is not None:
@@ -536,13 +512,19 @@ def _dedup_sorted(cols: Cols, h1, h2, mask):
     return sorted_cols, keep
 
 
-def _membership(a_cols: Cols, amask, b_cols: Cols, bmask, names, window=8):
-    """For each row of A: does an equal row exist in B? (hash + verify)."""
-    ah1, ah2 = hash_columns([a_cols[k] for k in names])
-    bh1, bh2 = hash_columns([b_cols[k] for k in names])
+def _membership(a_cols: Cols, amask, ah1, ah2, b_cols: Cols, bmask, bh1, bh2,
+                names, window=8):
+    """For each row of A: does an equal row exist in B? (hash + verify).
+
+    Row hashes are passed in — carried through the shuffle or computed once
+    by the caller — so membership itself never rehashes.
+    """
     bh1 = jnp.where(bmask, bh1, jnp.uint32(0xFFFFFFFF))
-    bsorted, border = _sort_cols(b_cols, [bh1, bh2], bmask)
+    # single-key stable sort (see _local_sorted_join): the bounded window
+    # probes equal-h1 groups, no secondary key needed
+    border = jnp.argsort(bh1, stable=True)
     bh1s, bh2s, bvs = bh1[border], bh2[border], bmask[border]
+    bsorted = {k: b_cols[k][border] for k in names}
     bcap = bh1s.shape[0]
     lo = jnp.searchsorted(bh1s, ah1, side="left").astype(jnp.int32)
     hi = jnp.searchsorted(bh1s, ah1, side="right").astype(jnp.int32)
@@ -562,41 +544,38 @@ def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
     bcols, bn = _local_parts(bc, bcnt)
     ov = jnp.zeros((), jnp.int32)
 
-    def move(cols, count, bucket, mid):
-        cap = next(iter(cols.values())).shape[0]
-        mask = _mask_for(count, cap)
-        h1, _ = hash_columns([cols[k] for k in names])
-        dest = jnp.where(mask, (h1 % np.uint32(n_shards)).astype(jnp.int32),
-                         n_shards)
-        bufs, valid, o1 = _exchange(cols, count, dest, n_shards, bucket, axis)
-        out, cnt, o2 = _compact_cols(bufs, valid, mid)
-        return out, cnt, o1 + o2
-
     if n_shards > 1:
-        acols, an, o = move(acols, an, abucket, mid_a)
+        acols, an, o = hash_shuffle(acols, an, names, n_shards, abucket,
+                                    mid_a, axis, carry_hashes=True)
         ov += o
-        bcols, bn, o = move(bcols, bn, bbucket, mid_b)
+        bcols, bn, o = hash_shuffle(bcols, bn, names, n_shards, bbucket,
+                                    mid_b, axis, carry_hashes=True)
         ov += o
+    # hashes: popped from the shuffle carry, or computed once here
+    acols, ah1, ah2 = take_hashes(acols, names)
+    bcols, bh1, bh2 = take_hashes(bcols, names)
 
     acap = next(iter(acols.values())).shape[0]
     bcap = next(iter(bcols.values())).shape[0]
     amask, bmask = _mask_for(an, acap), _mask_for(bn, bcap)
 
     if kind == "union":
-        # concat then dedup
+        # concat then dedup (hashes concatenate alongside the rows)
         cat = {k: jnp.concatenate([acols[k], bcols[k]]) for k in acols}
         cmask = jnp.concatenate([amask, bmask])
-        h1, h2 = hash_columns([cat[k] for k in names])
+        h1 = jnp.concatenate([ah1, bh1])
+        h2 = jnp.concatenate([ah2, bh2])
         sorted_cols, keep = _dedup_sorted(cat, h1, h2, cmask)
         out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
     elif kind == "difference":
-        found = _membership(acols, amask, bcols, bmask, names)
+        found = _membership(acols, amask, ah1, ah2, bcols, bmask, bh1, bh2,
+                            names)
         out, cnt, o = _compact_cols(acols, amask & ~found, out_capacity)
     elif kind == "intersect":
-        found = _membership(acols, amask, bcols, bmask, names)
-        h1, h2 = hash_columns([acols[k] for k in names])
+        found = _membership(acols, amask, ah1, ah2, bcols, bmask, bh1, bh2,
+                            names)
         kept = amask & found
-        sorted_cols, keep = _dedup_sorted(acols, h1, h2, kept)
+        sorted_cols, keep = _dedup_sorted(acols, ah1, ah2, kept)
         out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
     else:
         raise ValueError(kind)
@@ -614,6 +593,7 @@ def _make_setop(kind: str, opname: str, doc: str):
         names = tuple(sorted(set(a.column_names) & set(b.column_names)))
         if names != a.column_names or names != b.column_names:
             raise ValueError("set operators require identical schemas")
+        check_no_reserved(names)
         n = ctx.n_shards
         default_out = (a.capacity + b.capacity if kind == "union"
                        else a.capacity)

@@ -6,6 +6,10 @@ histogram — one HBM read of the key block instead of three.  The histogram
 uses a one-hot VPU reduction with the histogram block revisited across the
 row grid (accumulation), so the row dimension is the innermost grid axis.
 
+With ``return_hashes`` the kernel also emits the full ``(h1, h2)`` row
+hashes so the shuffle engine can carry them through the exchange
+(DESIGN.md §3.3) — join and set-op kernels then never rehash post-shuffle.
+
 The hash chain must match ``repro.core.table.hash_columns`` bit-for-bit —
 the pure-jnp oracle in ``ref.py`` *is* that function.
 """
@@ -19,7 +23,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 _H1_INIT = np.uint32(0x9E3779B9)
+_H2_INIT = np.uint32(0x85EBCA6B)
 _MUL1 = np.uint32(0xCC9E2D51)
+_MUL2 = np.uint32(0x1B873593)
+_K2_XOR = np.uint32(0xDEADBEEF)
 
 
 def _mix(h, k, mul):
@@ -30,8 +37,12 @@ def _mix(h, k, mul):
     return h * np.uint32(5) + np.uint32(0xE6546B64)
 
 
-def _kernel(keys_ref, valid_ref, dest_ref, hist_ref, *, n_parts: int,
-            sentinel: int, n_cols: int):
+def _kernel(keys_ref, valid_ref, *out_refs, n_parts: int, sentinel: int,
+            n_cols: int, with_hashes: bool):
+    if with_hashes:
+        dest_ref, h1_ref, h2_ref, hist_ref = out_refs
+    else:
+        dest_ref, hist_ref = out_refs
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -40,13 +51,20 @@ def _kernel(keys_ref, valid_ref, dest_ref, hist_ref, *, n_parts: int,
 
     block_n = dest_ref.shape[0]
     h1 = jnp.full((block_n,), _H1_INIT, jnp.uint32)
+    h2 = jnp.full((block_n,), _H2_INIT, jnp.uint32)
     for c in range(n_cols):
-        h1 = _mix(h1, keys_ref[:, c], _MUL1)
+        k = keys_ref[:, c]
+        h1 = _mix(h1, k, _MUL1)
+        if with_hashes:
+            h2 = _mix(h2, k ^ _K2_XOR, _MUL2)
     h1 = h1 ^ (h1 >> 16)
 
     dest = (h1 % np.uint32(n_parts)).astype(jnp.int32)
     dest = jnp.where(valid_ref[...] != 0, dest, sentinel)
     dest_ref[...] = dest
+    if with_hashes:
+        h1_ref[...] = h1
+        h2_ref[...] = h2 ^ (h2 >> 16)
 
     p_pad = hist_ref.shape[0]
     rows = jax.lax.broadcasted_iota(jnp.int32, (p_pad, block_n), 0)
@@ -56,32 +74,41 @@ def _kernel(keys_ref, valid_ref, dest_ref, hist_ref, *, n_parts: int,
 
 def hash_partition_pallas(keys_u32: jnp.ndarray, valid: jnp.ndarray,
                           n_parts: int, *, block_n: int = 1024,
-                          interpret: bool = False):
-    """keys_u32 (N, K) uint32, valid (N,) int32 → (dest (N,), hist (P,))."""
+                          interpret: bool = False,
+                          return_hashes: bool = False):
+    """keys_u32 (N, K) uint32, valid (N,) int32 → (dest (N,), hist (P,))
+    plus ``(h1 (N,), h2 (N,))`` uint32 when ``return_hashes``."""
     n, k = keys_u32.shape
     n_pad = -(-n // block_n) * block_n
     p_pad = max(8, -(-n_parts // 128) * 128)
     keys = jnp.pad(keys_u32, ((0, n_pad - n), (0, 0)))
     val = jnp.pad(valid.astype(jnp.int32), (0, n_pad - n))
 
-    dest, hist = pl.pallas_call(
+    row_spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    row_shape = jax.ShapeDtypeStruct((n_pad,), jnp.int32)
+    out_specs = [row_spec]
+    out_shape = [row_shape]
+    if return_hashes:
+        out_specs += [row_spec, row_spec]
+        out_shape += [jax.ShapeDtypeStruct((n_pad,), jnp.uint32)] * 2
+    out_specs.append(pl.BlockSpec((p_pad,), lambda i: (0,)))
+    out_shape.append(jax.ShapeDtypeStruct((p_pad,), jnp.int32))
+
+    outs = pl.pallas_call(
         functools.partial(_kernel, n_parts=n_parts, sentinel=p_pad,
-                          n_cols=k),
+                          n_cols=k, with_hashes=return_hashes),
         grid=(n_pad // block_n,),
         in_specs=[
             pl.BlockSpec((block_n, k), lambda i: (i, 0)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((p_pad,), lambda i: (0,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
-            jax.ShapeDtypeStruct((p_pad,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(keys, val)
+    dest, hist = outs[0], outs[-1]
     # sentinel rows → n_parts (match ref convention)
     d = jnp.where(dest[:n] == p_pad, n_parts, dest[:n])
+    if return_hashes:
+        return d, hist[:n_parts], outs[1][:n], outs[2][:n]
     return d, hist[:n_parts]

@@ -1,4 +1,12 @@
-"""Public entry point for hash-partitioning (shuffle destination compute)."""
+"""Public entry point for hash-partitioning (shuffle destination compute).
+
+Dispatch mirrors ``segment_reduce/ops.py``: compiled Pallas kernel on TPU,
+pure-jnp reference elsewhere.  ``force`` overrides for testing ("pallas"
+uses interpret mode off-TPU).  This is the single hash site of the shuffle
+engine (``core/exchange.py``): with ``return_hashes`` the fused kernel also
+hands back ``(h1, h2)`` so the exchange can carry them and downstream
+operators never rehash.
+"""
 from __future__ import annotations
 
 from typing import Sequence, Tuple
@@ -18,10 +26,17 @@ def _on_tpu() -> bool:
 
 def hash_partition(key_cols: Sequence[jnp.ndarray], n_parts: int,
                    valid: jnp.ndarray, force: str | None = None,
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Row destinations + histogram; Pallas on TPU, jnp oracle elsewhere."""
+                   return_hashes: bool = False):
+    """Row destinations + histogram (+ row hashes when ``return_hashes``).
+
+    Pallas on TPU, jnp oracle elsewhere.  Returns ``(dest, hist)`` or
+    ``(dest, hist, h1, h2)``.
+    """
     if force == "pallas" or (force is None and _on_tpu()):
         keys = jnp.stack([_as_u32(c) for c in key_cols], axis=1)
         return _kernel.hash_partition_pallas(
-            keys, valid, n_parts, interpret=not _on_tpu())
+            keys, valid, n_parts, interpret=not _on_tpu(),
+            return_hashes=return_hashes)
+    if return_hashes:
+        return _ref.hash_partition_full(key_cols, n_parts, valid)
     return _ref.hash_partition(key_cols, n_parts, valid)

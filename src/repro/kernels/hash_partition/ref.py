@@ -9,6 +9,24 @@ import numpy as np
 from repro.core.table import hash_columns
 
 
+def hash_partition_full(key_cols: Sequence[jnp.ndarray], n_parts: int,
+                        valid: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Row → destination partition, histogram, and the row hashes.
+
+    Returns (dest (N,) int32 with invalid rows = n_parts,
+             hist (n_parts,) int32 over valid rows,
+             h1 (N,) uint32, h2 (N,) uint32).
+    """
+    h1, h2 = hash_columns(list(key_cols))
+    dest = (h1 % np.uint32(n_parts)).astype(jnp.int32)
+    dest = jnp.where(valid, dest, n_parts)
+    hist = jnp.zeros(n_parts + 1, jnp.int32).at[
+        jnp.clip(dest, 0, n_parts)].add(1)[:n_parts]
+    return dest, hist, h1, h2
+
+
 def hash_partition(key_cols: Sequence[jnp.ndarray], n_parts: int,
                    valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Row → destination partition + per-partition histogram.
@@ -16,9 +34,5 @@ def hash_partition(key_cols: Sequence[jnp.ndarray], n_parts: int,
     Returns (dest (N,) int32 with invalid rows = n_parts,
              hist (n_parts,) int32 over valid rows).
     """
-    h1, _ = hash_columns(list(key_cols))
-    dest = (h1 % np.uint32(n_parts)).astype(jnp.int32)
-    dest = jnp.where(valid, dest, n_parts)
-    hist = jnp.zeros(n_parts + 1, jnp.int32).at[
-        jnp.clip(dest, 0, n_parts)].add(1)[:n_parts]
+    dest, hist, _, _ = hash_partition_full(key_cols, n_parts, valid)
     return dest, hist

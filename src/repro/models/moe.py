@@ -4,9 +4,10 @@ Routing tokens to experts is exactly the paper's shuffle operator (Fig 2)
 applied to tensors: hash/top-k chooses a destination *partition* (expert),
 rows are packed into capacity-bounded buckets, exchanged, processed, and
 combined.  The TPU-native realization is sort-based packing (argsort by
-expert id — the same group-by-destination step as
-``core.table_ops._exchange``) into a static ``(groups, E, capacity, d)``
-buffer, with expert placement expressed through sharding constraints:
+expert id — the same group-by-destination step that
+``core.exchange.exchange_rows`` performs with a counting scatter) into a
+static ``(groups, E, capacity, d)`` buffer, with expert placement expressed
+through sharding constraints:
 
   * experts sharded over the ``model`` axis (EP) when ``E %% model == 0``
     (jamba-16e, qwen2-64e-padded); the combine contraction over the sharded
@@ -237,7 +238,8 @@ def _moe_ffn_ep_shardmap(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                 jax.lax.pmean(v, dp_axes) for v in metrics)
         return y, metrics[0], metrics[1], metrics[2]
 
-    fn = jax.shard_map(
+    from repro.core.context import compat_shard_map
+    fn = compat_shard_map(
         local, mesh=mesh,
         in_specs=in_specs,
         out_specs=(P(bspec, None, None), P(), P(), P()),

@@ -163,6 +163,24 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Params:
         lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape), one)
 
 
+@jax.custom_vjp
+def _grad_transparent_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _gtb_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _gtb_bwd(_, g):
+    return (g,)
+
+
+# optimization_barrier has no differentiation rule on older jax; keep the
+# barrier in the forward pass and pass cotangents straight through.
+_grad_transparent_barrier.defvjp(_gtb_fwd, _gtb_bwd)
+
+
 def apply_stack(stacked: Params, cfg: ModelConfig, x, *, mode: str,
                 caches=None, positions=None, enc_out=None, causal=True,
                 cache_len: int = 0):
@@ -171,7 +189,7 @@ def apply_stack(stacked: Params, cfg: ModelConfig, x, *, mode: str,
         # barrier: stops XLA hoisting the bf16→f32 norm upcast out of the
         # (rematerialized) body — without it the scan's saved per-group
         # residual stack is materialized in f32, doubling activation memory.
-        x = jax.lax.optimization_barrier(x)
+        x = _grad_transparent_barrier(x)
         gp = inp[0] if isinstance(inp, tuple) else inp
         gc = inp[1] if isinstance(inp, tuple) else None
         new_caches = {}

@@ -129,7 +129,8 @@ def embed_lookup(embed, tokens):
     def local(e, t):
         return e[t]
 
-    fn = jax.shard_map(
+    from repro.core.context import compat_shard_map
+    fn = compat_shard_map(
         local, mesh=mesh,
         in_specs=(P(None, d_axis), P(b_spec, None)),
         out_specs=P(b_spec, None, d_axis))

@@ -9,8 +9,15 @@ from repro.configs import get_config
 from repro.sharding import axes as am
 from repro.sharding.partition import param_spec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MP_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:  # jax<=0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MP_MESH = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def spec(names, shape, arch="deepseek-67b", mesh=MESH):

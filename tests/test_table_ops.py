@@ -3,7 +3,11 @@ including hypothesis property tests on relational invariants."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 env may lack hypothesis: skip only @given tests
+    from conftest import given, settings, st
 
 from repro.core import DistTable, Table, local_context, table_ops
 from repro.core.operator import Abstraction, list_operators
