@@ -118,6 +118,49 @@ def bench_shuffle(n: int = 500_000):
     _emit("fig2_shuffle", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
 
 
+def bench_groupby_lowcard(n: int = 200_000, n_keys: int = 1_000):
+    """Low-cardinality GroupBy: the map-side-combine / hash-slot regime.
+
+    ``out_capacity`` declares the bounded key cardinality, which selects
+    the sort-free hash grouping kernel (and, on multi-shard meshes, the
+    shrunken combine exchange) — DESIGN.md §4.
+    """
+    dt = _table(n, n_keys=n_keys)
+    out_cap = 1 << (2 * n_keys - 1).bit_length()
+    jfn = jax.jit(lambda t: table_ops.groupby_aggregate(
+        t, ["k"], [("v", "sum"), ("v", "mean")], out_capacity=out_cap,
+        ctx=CTX))
+    us = _timeit(jfn, dt)
+    _emit("groupby_lowcard", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+
+def bench_join_then_groupby(n: int = 200_000):
+    """Operator chain: join + groupby on the join keys.
+
+    The groupby consumes the join's partitioning metadata, so on meshes the
+    chain issues shuffles only for the join inputs (zero for pre-partitioned
+    ones) and none for the groupby — jaxpr-asserted in
+    tests/test_partitioning.py; here the steady-state wall time is tracked.
+    """
+    rng = np.random.default_rng(0)
+    lk = rng.permutation(n).astype(np.int32)
+    rk = rng.permutation(n).astype(np.int32)
+    l = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(lk), "a": jnp.asarray(lk, jnp.float32)}), CTX)
+    r = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(rk), "b": jnp.asarray(rk, jnp.float32)}), CTX)
+
+    def chain(a, b):
+        j, ov1 = table_ops.join(a, b, ["k"], out_capacity=n, ctx=CTX)
+        g, ov2 = table_ops.groupby_aggregate(
+            j, ["k"], [("a", "sum"), ("b", "mean")], ctx=CTX)
+        return g, ov1 + ov2
+
+    jfn = jax.jit(chain)
+    us = _timeit(jfn, l, r, iters=3)
+    _emit("join_then_groupby", us, f"{n / (us * 1e-6) / 1e6:.2f}Mrow/s")
+
+
 def bench_join_scaling(sizes=(50_000, 100_000, 200_000, 400_000)):
     """Paper Fig 16: join wall time while load grows (weak scaling proxy:
     rows double, per-row time should stay ~flat)."""
@@ -196,29 +239,110 @@ def write_json(path: str) -> None:
     print(f"# wrote {path}", flush=True)
 
 
+def compare_json(base: dict, baseline_name: str, threshold: float,
+                 min_delta_us: float = 1000.0) -> int:
+    """Regression gate: fail when any case slows >threshold vs baseline.
+
+    ``base`` is the PRELOADED baseline record — callers read it before any
+    ``write_json`` so that ``--compare X --out X`` (or the default ``--out``
+    pointing at the committed baseline) can never compare a run against
+    its own freshly-written copy.
+
+    Only cases present in both the fresh run and the committed baseline are
+    compared (quick-mode runs a subset at smaller sizes, so a quick number
+    beating a full-size baseline is expected; what the gate catches is the
+    catastrophic class — retrace-per-call, lost fusion, accidental
+    quadratic paths — which blow far past the margin in either mode).
+    A slowdown must exceed the relative threshold AND ``min_delta_us`` of
+    absolute regression: overhead-dominated microsecond cases (project,
+    scalar aggregate) jitter past 30% from dispatch noise alone on slower
+    runners, while every real regression class costs milliseconds.
+    Returns the number of regressions; prints a per-case delta table.
+    """
+    regressions = []
+    print(f"# compare vs {baseline_name} "
+          f"(fail > {threshold:+.0%} and > {min_delta_us:.0f}us)")
+    for name, us, _ in ROWS:
+        if name not in base:
+            print(f"# {name}: no baseline, skipped")
+            continue
+        ref = base[name]["us_per_call"]
+        delta = us / ref - 1.0
+        regressed = delta > threshold and us - ref > min_delta_us
+        flag = " REGRESSION" if regressed else ""
+        print(f"# {name}: {us:.1f}us vs {ref:.1f}us ({delta:+.1%}){flag}")
+        if regressed:
+            regressions.append(name)
+    if regressions:
+        print(f"# FAILED: {len(regressions)} case(s) regressed "
+              f">{threshold:.0%}: {', '.join(regressions)}")
+    else:
+        print("# regression gate passed")
+    return len(regressions)
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--quick", action="store_true",
                    help="small sizes, shuffle-relevant benches only (CI)")
     p.add_argument("--out", default=DEFAULT_JSON,
                    help="path for the JSON perf record")
+    p.add_argument("--compare", metavar="BASELINE.json",
+                   help="fail when any case regresses vs this record")
+    p.add_argument("--threshold", type=float, default=0.30,
+                   help="relative slowdown tolerated by --compare")
+    p.add_argument("--min-delta-us", type=float, default=1000.0,
+                   help="absolute slowdown (us) below which --compare "
+                        "treats a relative regression as noise")
+    p.add_argument("--compare-files", nargs=2, metavar=("FRESH", "BASELINE"),
+                   help="compare two existing records (no benches run): "
+                        "the like-for-like gate — both sides same sizes, "
+                        "same machine (CI runs the PR base for BASELINE)")
     args = p.parse_args(argv)
+
+    if args.compare_files:
+        fresh_path, baseline_path = args.compare_files
+        with open(fresh_path) as f:
+            for name, rec in json.load(f).items():
+                ROWS.append((name, rec["us_per_call"], rec["derived"]))
+        with open(baseline_path) as f:
+            base = json.load(f)
+        if compare_json(base, baseline_path, args.threshold,
+                        args.min_delta_us):
+            raise SystemExit(1)
+        return
+
+    # read the baseline BEFORE running/writing anything: with the default
+    # --out both paths may name the committed baseline, and comparing a
+    # run against its own fresh copy would make the gate vacuous
+    base = None
+    if args.compare:
+        with open(args.compare) as f:
+            base = json.load(f)
 
     print("name,us_per_call,derived")
     if args.quick:
         bench_table_ops(n=20_000)
         bench_shuffle(n=50_000)
+        bench_groupby_lowcard(n=20_000, n_keys=200)
+        bench_join_then_groupby(n=20_000)
         bench_join_scaling(sizes=(20_000, 40_000))
     else:
         bench_array_ops()
         bench_table_ops()
         bench_shuffle()
+        bench_groupby_lowcard()
+        bench_join_then_groupby()
         bench_join_scaling()
         bench_mds()
         bench_lm_step()
         bench_kernels()
     write_json(args.out)
     print(f"# {len(ROWS)} benchmarks complete")
+    if base is not None:
+        if compare_json(base, args.compare, args.threshold,
+                        args.min_delta_us):
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -64,7 +64,8 @@ class TSet:
                 cols[k] = blocks[:, start:stop].reshape(
                     (p * (stop - start),) + v.shape[1:])
             counts = jnp.clip(dt.counts - start, 0, stop - start)
-            chunks.append(DistTable(cols, counts))
+            # row-slicing never moves rows across shards: layout survives
+            chunks.append(DistTable(cols, counts, dt.partitioning))
         return cls.from_chunks(chunks, ctx)
 
     # -- piecewise (streaming) operators ------------------------------------
@@ -152,7 +153,13 @@ def _concat_chunks(chunks: List[DistTable], ctx: HPTMTContext) -> DistTable:
     cols2, counts2 = table_ops._run_sharded(
         ctx, impl, (out_cols, jnp.zeros((p,), jnp.int32), valid),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
-    return DistTable(cols2, counts2)
+    # shard-wise concatenation keeps every row on its shard: when all
+    # chunks agree on a hash layout, the merged table still has it — this
+    # is what lets the combiner barrier's merge groupby elide its shuffle
+    # (DESIGN.md §4)
+    parts = {c.partitioning for c in chunks}
+    part = parts.pop() if len(parts) == 1 else None
+    return DistTable(cols2, counts2, part)
 
 
 def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
@@ -168,25 +175,43 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
             elif node.kind == "project":
                 out.append(table_ops.project(c, node.payload["cols"], ctx=ctx))
             else:
+                updates = node.payload["fn"](c.columns)
                 new_cols = dict(c.columns)
-                new_cols.update(node.payload["fn"](c.columns))
-                out.append(DistTable(new_cols, c.counts))
+                new_cols.update(updates)
+                # a transform that rewrites a hash-key column invalidates
+                # the layout evidence; untouched keys keep it
+                part = c.partitioning
+                if part is not None and set(part[0]) & set(updates):
+                    part = None
+                out.append(DistTable(new_cols, c.counts, part))
         return out
 
     if node.kind == "groupby":
-        # combiner pattern: partial aggregate per chunk, then merge partials
+        # combiner pattern: partial aggregate per chunk, then merge the
+        # partials.  Each per-chunk groupby leaves its output partitioned
+        # on the keys; _concat_chunks preserves the common layout, so the
+        # merge groupby below elides its shuffle — one exchange per chunk,
+        # zero at the barrier (DESIGN.md §4).
         chunks = _execute(node.inputs[0], ctx)
         keys, aggs = node.payload["keys"], node.payload["aggs"]
-        partial_aggs, merge_aggs = _split_aggs(aggs)
+        partial_aggs, merge_aggs = table_ops.split_aggs(aggs)
+        # map-side combine is essential here, not just an optimisation: a
+        # chunk's per-shard capacity is small by design, so shuffling raw
+        # rows of a low-cardinality key would overflow it — pre-aggregated
+        # partials always fit
+        kw = dict(node.payload["kw"])
+        kw.setdefault("combine", True)
         partials = []
         for c in chunks:
             part, _ = table_ops.groupby_aggregate(
-                c, keys, partial_aggs, ctx=ctx, **node.payload["kw"])
+                c, keys, partial_aggs, ctx=ctx, **kw)
             partials.append(part)
         merged = _concat_chunks(partials, ctx)
         final, _ = table_ops.groupby_aggregate(
-            merged, keys, merge_aggs, ctx=ctx, **node.payload["kw"])
-        final = _finalize_aggs(final, aggs, merge_aggs)
+            merged, keys, merge_aggs, ctx=ctx, **kw)
+        final = DistTable(
+            table_ops.finalize_agg_cols(final.columns, aggs, merge_aggs),
+            final.counts, final.partitioning)
         return [final]
 
     # materializing barriers
@@ -209,38 +234,5 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
     raise ValueError(f"unknown node {node.kind}")
 
 
-def _split_aggs(aggs):
-    """Map requested aggregates to (per-chunk partial, merge) aggregates."""
-    partial, merge = [], []
-    for col, op in aggs:
-        if op in ("sum", "count"):
-            partial.append((col, op))
-            merge.append((f"{col}_{op}", "sum"))
-        elif op in ("min", "max"):
-            partial.append((col, op))
-            merge.append((f"{col}_{op}", op))
-        elif op == "mean":
-            partial.append((col, "sum"))
-            partial.append((col, "count"))
-            merge.append((f"{col}_sum", "sum"))
-            merge.append((f"{col}_count", "sum"))
-        else:
-            raise ValueError(op)
-    return tuple(dict.fromkeys(partial)), tuple(dict.fromkeys(merge))
-
-
-def _finalize_aggs(dt: DistTable, aggs, merge_aggs) -> DistTable:
-    merged = dict(dt.columns)
-    merge_labels = {f"{c}_{o}" for c, o in merge_aggs}
-    # key columns = everything the merge-groupby did not produce
-    out = {k: v for k, v in merged.items() if k not in merge_labels}
-    for col, op in aggs:
-        if op == "mean":
-            s = merged[f"{col}_sum_sum"]
-            c = merged[f"{col}_count_sum"]
-            out[f"{col}_mean"] = s / jnp.maximum(c, 1.0)
-        elif op in ("sum", "count"):
-            out[f"{col}_{op}"] = merged[f"{col}_{op}_sum"]
-        else:
-            out[f"{col}_{op}"] = merged[f"{col}_{op}_{op}"]
-    return DistTable(out, dt.counts)
+# agg decomposition/finalization shared with the eager map-side combine:
+# table_ops.split_aggs / table_ops.finalize_agg_cols (DESIGN.md §4)

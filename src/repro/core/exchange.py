@@ -219,6 +219,11 @@ def hash_shuffle(cols: Cols, count: jnp.ndarray, key_names: Sequence[str],
     :data:`H2_NAME` columns so downstream kernels skip rehashing; pop them
     with :func:`take_hashes`.
 
+    A completed call establishes the ``(key_names, n_shards)`` hash layout
+    that operators record as ``DistTable.partitioning`` — the evidence the
+    shuffle-elision machinery trusts (DESIGN.md §4).  Any exchange on other
+    keys or a different shard count invalidates it.
+
     Returns ``(columns, new_count, overflow)``.
     """
     from repro.kernels.hash_partition import ops as hpops  # lazy: no cycle
@@ -227,11 +232,7 @@ def hash_shuffle(cols: Cols, count: jnp.ndarray, key_names: Sequence[str],
     mask = jnp.arange(capacity, dtype=jnp.int32) < count
     key_cols = [cols[k] for k in key_names]
     if carry_hashes:
-        clash = {H1_NAME, H2_NAME} & set(cols)
-        if clash:
-            raise ValueError(
-                f"column names {sorted(clash)} are reserved for carried "
-                f"row hashes (core/exchange.py); rename the column(s)")
+        check_no_reserved(cols)
         dest, hist, h1, h2 = hpops.hash_partition(
             key_cols, n_shards, mask, return_hashes=True)
         cols = dict(cols)

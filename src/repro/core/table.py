@@ -176,6 +176,12 @@ def _pad_axis0(x: jnp.ndarray, capacity: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # distributed Table
 # ---------------------------------------------------------------------------
+#: Partitioning metadata: ``(hash_keys, n_shards)`` — the ordered key
+#: columns whose hash assigned each row to its shard, and the shard count
+#: the hash was taken modulo.  ``None`` means "layout unknown".
+Partitioning = Optional[Tuple[Tuple[str, ...], int]]
+
+
 @jax.tree_util.register_pytree_node_class
 class DistTable:
     """Row-partitioned table: ``n_shards`` blocks of ``capacity`` rows each.
@@ -185,23 +191,34 @@ class DistTable:
     ``(n_shards,)`` giving each shard's valid-row count.  Inside a
     ``shard_map`` region each shard sees a local ``(capacity, ...)`` block —
     i.e. a plain :class:`Table`.
+
+    ``partitioning`` records how rows were assigned to shards (DESIGN.md §4):
+    ``(hash_keys, n_shards)`` after a hash exchange on ``hash_keys``, else
+    ``None``.  It is static pytree aux data (part of the trace signature,
+    not a traced value), so operators can skip a shuffle at Python level
+    when equal keys are already co-located.  Constructors that cannot prove
+    a layout (``from_local``, concatenation) leave it ``None``.
     """
 
-    def __init__(self, columns: Columns, counts: jnp.ndarray):
+    def __init__(self, columns: Columns, counts: jnp.ndarray,
+                 partitioning: Partitioning = None):
         self.columns = dict(columns)
         self.counts = jnp.asarray(counts, jnp.int32)
+        self.partitioning = partitioning
 
     # -- pytree ------------------------------------------------------------
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
         children = tuple(self.columns[k] for k in names) + (self.counts,)
-        return children, names
+        return children, (names, self.partitioning)
 
     @classmethod
-    def tree_unflatten(cls, names, children):
+    def tree_unflatten(cls, aux, children):
+        names, partitioning = aux
         obj = object.__new__(cls)
         obj.columns = dict(zip(names, children[:-1]))
         obj.counts = children[-1]
+        obj.partitioning = partitioning
         return obj
 
     # -- properties ----------------------------------------------------------
@@ -251,7 +268,7 @@ class DistTable:
         cols = {k: jax.device_put(v, ctx.row_sharding(v.ndim))
                 for k, v in self.columns.items()}
         counts = jax.device_put(self.counts, ctx.row_sharding(1))
-        return DistTable(cols, counts)
+        return DistTable(cols, counts, self.partitioning)
 
     # -- conversion ----------------------------------------------------------
     def shard_table(self, i: int) -> Table:

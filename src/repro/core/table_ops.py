@@ -32,6 +32,7 @@ import functools
 import math
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -40,7 +41,7 @@ from .context import HPTMTContext
 from .exchange import (check_no_reserved, compact_rows, exchange_rows,
                        hash_shuffle, take_hashes)
 from .operator import Abstraction, Style, operator
-from .table import DistTable, Table
+from .table import DistTable, Table, _pad_axis0
 
 Cols = Dict[str, jnp.ndarray]
 
@@ -97,6 +98,18 @@ def _bucket_capacity(capacity: int, n_shards: int, factor: float) -> int:
     return max(1, min(capacity, math.ceil(capacity * factor / n_shards)))
 
 
+def _partitioned_on(dt: DistTable, keys: Sequence[str],
+                    ctx: HPTMTContext) -> bool:
+    """True when ``dt``'s rows are already hash-co-located on ``keys``.
+
+    Metadata is trusted only on an exact ``(ordered keys, n_shards)`` match —
+    the murmur chain is order-sensitive, so ("a","b") and ("b","a") describe
+    different layouts (DESIGN.md §4).
+    """
+    return (ctx.n_shards > 1
+            and dt.partitioning == (tuple(keys), ctx.n_shards))
+
+
 def _shuffle_impl(cols: Cols, counts: jnp.ndarray, *, key_names, n_shards,
                   bucket, out_capacity, axis, dest_fn=None):
     cols, count = _local_parts(cols, counts)
@@ -120,8 +133,20 @@ def _shuffle_impl(cols: Cols, counts: jnp.ndarray, *, key_names, n_shards,
 def shuffle(dt: DistTable, keys: Sequence[str], *, ctx: HPTMTContext,
             out_capacity: Optional[int] = None, bucket_factor: float = 2.0,
             ) -> Tuple[DistTable, jnp.ndarray]:
-    """Re-distribute rows so equal keys land on the same shard (Fig 2)."""
+    """Re-distribute rows so equal keys land on the same shard (Fig 2).
+
+    A no-op (elided at trace level, DESIGN.md §4) when ``dt.partitioning``
+    already records a hash exchange on exactly these keys — unless the call
+    also asks for a resize (``out_capacity`` differing from the input
+    capacity), which must run regardless of layout so the output shape and
+    overflow accounting never depend on input provenance.  The output
+    carries ``(keys, n_shards)`` partitioning metadata so downstream
+    join/groupby/set ops on the same keys skip their own shuffle.
+    """
     n = ctx.n_shards
+    if _partitioned_on(dt, keys, ctx) and (out_capacity is None
+                                           or out_capacity == dt.capacity):
+        return dt, jnp.zeros((), jnp.int32)
     bucket = _bucket_capacity(dt.capacity, n, bucket_factor)
     out_cap = out_capacity or dt.capacity
     impl = functools.partial(
@@ -130,7 +155,7 @@ def shuffle(dt: DistTable, keys: Sequence[str], *, ctx: HPTMTContext,
     cols, counts, overflow = _run_sharded(
         ctx, impl, (dt.columns, dt.counts),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
-    return DistTable(cols, counts), overflow
+    return DistTable(cols, counts, (tuple(keys), n)), overflow
 
 
 # ===========================================================================
@@ -151,14 +176,23 @@ def select(dt: DistTable, predicate: Callable[[Cols], jnp.ndarray], *,
     cols, counts = _run_sharded(
         ctx, impl, (dt.columns, dt.counts),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
-    return DistTable(cols, counts)
+    # rows never change shards: the partitioning layout survives filtering
+    return DistTable(cols, counts, dt.partitioning)
 
 
 @operator("table.project", Abstraction.TABLE, distributed=False)
 def project(dt: DistTable, columns: Sequence[str], *,
             ctx: HPTMTContext) -> DistTable:
-    """Keep only the named columns (Table II). Purely local."""
-    return DistTable({k: dt.columns[k] for k in columns}, dt.counts)
+    """Keep only the named columns (Table II). Purely local.
+
+    Partitioning metadata survives only while every hash key column is
+    still present (DESIGN.md §4) — a projection that drops a key loses the
+    evidence of how rows were placed.
+    """
+    part = dt.partitioning
+    if part is not None and not set(part[0]) <= set(columns):
+        part = None
+    return DistTable({k: dt.columns[k] for k in columns}, dt.counts, part)
 
 
 # ===========================================================================
@@ -320,18 +354,23 @@ def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
 
 def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
                n_shards, lbucket, rbucket, mid_cap_l, mid_cap_r,
-               out_capacity, axis):
+               out_capacity, axis, shuffle_left, shuffle_right):
     lcols, ln = _local_parts(lc, lcnt)
     rcols, rn = _local_parts(rc, rcnt)
     ov = jnp.zeros((), jnp.int32)
     if n_shards > 1:
         # co-locate equal keys; carry (h1, h2) so the local join never
-        # rehashes the shuffled rows
-        lcols, ln, ov_l = hash_shuffle(lcols, ln, keys, n_shards, lbucket,
-                                       mid_cap_l, axis, carry_hashes=True)
-        rcols, rn, ov_r = hash_shuffle(rcols, rn, keys, n_shards, rbucket,
-                                       mid_cap_r, axis, carry_hashes=True)
-        ov = ov + ov_l + ov_r
+        # rehashes the shuffled rows.  A side whose partitioning metadata
+        # already proves co-location skips its exchange (DESIGN.md §4);
+        # its hashes are recomputed locally by take_hashes.
+        if shuffle_left:
+            lcols, ln, o = hash_shuffle(lcols, ln, keys, n_shards, lbucket,
+                                        mid_cap_l, axis, carry_hashes=True)
+            ov = ov + o
+        if shuffle_right:
+            rcols, rn, o = hash_shuffle(rcols, rn, keys, n_shards, rbucket,
+                                        mid_cap_r, axis, carry_hashes=True)
+            ov = ov + o
     out, cnt, ov_o = _local_sorted_join(
         lcols, ln, rcols, rn, keys=keys, how=how, max_matches=max_matches,
         window=window, out_capacity=out_capacity)
@@ -349,7 +388,11 @@ def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
     """Distributed equi-join: shuffle-by-key + local sort-merge (Table III).
 
     ``max_matches`` bounds the join fan-out per left row (static shapes);
-    rows beyond it are counted in the returned overflow.
+    rows beyond it are counted in the returned overflow.  A side already
+    hash-partitioned on exactly ``keys`` skips its shuffle; the output is
+    itself partitioned on ``keys`` (matched rows stay on the shard their
+    key hashed to), so a following groupby/join on the same keys moves no
+    data (DESIGN.md §4).
     """
     check_no_reserved(left.column_names)
     check_no_reserved(right.column_names)
@@ -362,11 +405,13 @@ def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
         lbucket=_bucket_capacity(left.capacity, n, bucket_factor),
         rbucket=_bucket_capacity(right.capacity, n, bucket_factor),
         mid_cap_l=mid_l, mid_cap_r=mid_r,
-        out_capacity=out_capacity or mid_l * max_matches)
+        out_capacity=out_capacity or mid_l * max_matches,
+        shuffle_left=not _partitioned_on(left, keys, ctx),
+        shuffle_right=not _partitioned_on(right, keys, ctx))
     cols, counts, overflow = _run_sharded(
         ctx, impl, (left.columns, left.counts, right.columns, right.counts),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
-    return DistTable(cols, counts), overflow
+    return DistTable(cols, counts, (tuple(keys), n)), overflow
 
 
 # ===========================================================================
@@ -375,20 +420,128 @@ def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
 _SEGMENT_OPS = ("sum", "mean", "min", "max", "count")
 
 
-def _local_groupby(cols: Cols, count, *, keys, aggs, out_capacity):
+def split_aggs(aggs):
+    """Decompose aggregates into (map-side partial, merge) aggregates.
+
+    sum/count/min/max combine associatively; mean decomposes into a sum and
+    a count that are summed at the merge and divided at finalize (the mean
+    decomposition rule, DESIGN.md §4).  Shared by the eager map-side combine
+    and the dataflow combiner barrier.
+    """
+    partial, merge = [], []
+    for col, op in aggs:
+        if op in ("sum", "count"):
+            partial.append((col, op))
+            merge.append((f"{col}_{op}", "sum"))
+        elif op in ("min", "max"):
+            partial.append((col, op))
+            merge.append((f"{col}_{op}", op))
+        elif op == "mean":
+            partial.append((col, "sum"))
+            partial.append((col, "count"))
+            merge.append((f"{col}_sum", "sum"))
+            merge.append((f"{col}_count", "sum"))
+        else:
+            raise ValueError(op)
+    return tuple(dict.fromkeys(partial)), tuple(dict.fromkeys(merge))
+
+
+def finalize_agg_cols(cols: Cols, aggs, merge_aggs) -> Cols:
+    """Rename merged partial-aggregate columns to the user's labels.
+
+    ``cols`` holds key columns plus ``{col}_{partial}_{mergeop}`` outputs of
+    the merge groupby; means are finalized as sum/count here (and only
+    here — partials never divide).
+    """
+    merge_labels = {f"{c}_{o}" for c, o in merge_aggs}
+    out = {k: v for k, v in cols.items() if k not in merge_labels}
+    for col, op in aggs:
+        if op == "mean":
+            s, c = cols[f"{col}_sum_sum"], cols[f"{col}_count_sum"]
+            out[f"{col}_mean"] = s / jnp.maximum(c, 1.0)
+        elif op in ("sum", "count"):
+            out[f"{col}_{op}"] = cols[f"{col}_{op}_sum"]
+        else:
+            out[f"{col}_{op}"] = cols[f"{col}_{op}_{op}"]
+    return out
+
+
+def _agg_outputs(aggs, seg_count, sums, minmax, out_capacity):
+    """Assemble labeled aggregate columns from the shared reductions."""
+    out: Cols = {}
+    for col, agg in aggs:
+        label = f"{col}_{agg}"
+        if agg == "count":
+            out[label] = seg_count[:out_capacity]
+        elif agg == "sum":
+            out[label] = sums[col][:out_capacity]
+        elif agg == "mean":
+            s = sums[col]
+            cnt = seg_count.reshape((-1,) + (1,) * (s.ndim - 1))
+            out[label] = (s / jnp.maximum(cnt, 1.0))[:out_capacity]
+        else:
+            out[label] = minmax[(col, agg)][:out_capacity]
+    return out
+
+
+def _segment_aggregates(cols: Cols, aggs, seg_id, n_segments: int):
+    """All reductions for ``aggs`` over ``seg_id`` with minimal scatters.
+
+    Every sum-combining lane (counts + sums, incl. both halves of mean)
+    rides ONE fused segment reduction — trailing dims flatten to extra
+    lanes and are reshaped back after; min/max reduce per column.
+    Repeated (column, op) pairs are computed once.
+    """
     from repro.kernels.segment_reduce import ops as segops
 
+    cap = seg_id.shape[0]
+    need_count = any(a in ("count", "mean") for _, a in aggs)
+    sum_cols = list(dict.fromkeys(
+        c for c, a in aggs if a in ("sum", "mean")))
+    parts, spans = [], []  # spans: (col name | None=count, trailing, lanes)
+    if need_count:
+        parts.append(jnp.ones((cap, 1), jnp.float32))
+        spans.append((None, (), 1))
+    for c in sum_cols:
+        v = cols[c].astype(jnp.float32).reshape(cap, -1)
+        parts.append(v)
+        spans.append((c, tuple(cols[c].shape[1:]), v.shape[1]))
+    seg_count, sums = None, {}
+    if parts:
+        fused = segops.segment_reduce_fused(
+            jnp.concatenate(parts, axis=1), seg_id, n_segments)
+        off = 0
+        for name, trailing, lanes in spans:
+            block = fused[:, off:off + lanes]
+            off += lanes
+            if name is None:
+                seg_count = block[:, 0]
+            else:
+                sums[name] = block.reshape((fused.shape[0],) + trailing)
+    minmax = {}
+    for col, agg in aggs:
+        if agg in ("min", "max") and (col, agg) not in minmax:
+            minmax[(col, agg)] = segops.segment_reduce(
+                cols[col].astype(jnp.float32), seg_id, n_segments, op=agg)
+    return seg_count, sums, minmax
+
+
+def _local_groupby_sort(cols: Cols, count, *, keys, aggs, out_capacity):
+    """Sort-based grouping: lexsort keys, segment-reduce runs."""
     cap = next(iter(cols.values())).shape[0]
     mask = _mask_for(count, cap)
     key_arrays = [cols[k] for k in keys]
     sorted_cols, order = _sort_cols(cols, key_arrays, mask)
     smask = mask[order]
 
-    new_seg = jnp.ones((cap,), bool)
+    # a row opens a new segment when ANY key differs from its predecessor
+    # (row 0 always does)
+    new_seg = jnp.concatenate(
+        [jnp.ones((1,), bool), jnp.zeros((cap - 1,), bool)])
     for k in keys:
         col = sorted_cols[k]
-        same = col[1:] == col[:-1]
-        new_seg = new_seg & jnp.concatenate([jnp.ones((1,), bool), ~same])
+        new_seg = new_seg | jnp.concatenate(
+            [jnp.ones((1,), bool), col[1:] != col[:-1]])
     new_seg = new_seg & smask
     seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
     n_seg = jnp.maximum(jnp.max(jnp.where(smask, seg_id, -1)) + 1, 0)
@@ -402,35 +555,163 @@ def _local_groupby(cols: Cols, count, *, keys, aggs, out_capacity):
         jnp.arange(cap, dtype=jnp.int32), mode="drop")
     for k in keys:
         out[k] = sorted_cols[k][first_idx][:out_capacity]
-    ones = jnp.ones((cap,), jnp.float32)
-    seg_count = segops.segment_reduce(ones, seg_id, cap + 1, op="sum")[:cap]
-    for col_name, agg in aggs:
-        vals = sorted_cols[col_name].astype(jnp.float32)
-        label = f"{col_name}_{agg}"
-        if agg == "count":
-            out[label] = seg_count[:out_capacity]
-            continue
-        red = "sum" if agg == "mean" else agg
-        r = segops.segment_reduce(vals, seg_id, cap + 1, op=red)[:cap]
-        if agg == "mean":
-            r = r / jnp.maximum(seg_count, 1.0)
-        out[label] = r[:out_capacity]
-    # zero-fill rows beyond n_seg
+    seg_count, sums, minmax = _segment_aggregates(
+        sorted_cols, aggs, seg_id, cap + 1)
+    out.update(_agg_outputs(aggs, seg_count, sums, minmax, out_capacity))
+    # zero-fill rows beyond n_seg; pad when out_capacity exceeds the input
+    # capacity (there can be at most ``cap`` groups, the rest is padding)
     m = _mask_for(jnp.minimum(n_seg, out_capacity), out_capacity)
-    out = {k: jnp.where(m.reshape((-1,) + (1,) * (v.ndim - 1)), v,
-                        jnp.zeros_like(v)) for k, v in out.items()}
-    return out, jnp.minimum(n_seg, out_capacity).astype(jnp.int32)
+    out = {k: jnp.where(m.reshape((-1,) + (1,) * (v.ndim - 1)),
+                        _pad_axis0(v, out_capacity),
+                        jnp.zeros(((out_capacity,) + v.shape[1:]), v.dtype))
+           for k, v in out.items()}
+    overflow = jnp.maximum(n_seg - out_capacity, 0)
+    return out, jnp.minimum(n_seg, out_capacity).astype(jnp.int32), overflow
+
+
+def _key_bits_eq(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Key equality by the same identity the hash uses.
+
+    Float keys compare by f32 bit pattern, exactly matching
+    ``table.hash_columns`` — so a row's key-compare verdict is always
+    consistent with its probe sequence.  Value-compare (``==``) would
+    deadlock NaN keys (NaN != NaN even against the row's own claimed slot,
+    so each NaN row would claim a fresh slot every round) and would call
+    ``-0.0 == +0.0`` equal while their hashes differ.  Consequence: the
+    hash kernel groups float keys bitwise (equal-bit NaNs form one group,
+    ±0.0 form two), where the sort kernel groups by value.
+    """
+    if jnp.issubdtype(a.dtype, jnp.floating):
+        a = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.uint32)
+        b = jax.lax.bitcast_convert_type(b.astype(jnp.float32), jnp.uint32)
+    return a == b
+
+
+def _local_groupby_hash(cols: Cols, count, *, keys, aggs, out_capacity,
+                        max_probes: int = 64):
+    """Sort-free grouping: claim hash-table slots, segment-reduce by slot.
+
+    Each valid row double-hash-probes a power-of-two slot table; the lowest
+    row index probing a free slot claims it for its key (scatter-min), and
+    rows match a slot only after comparing the ACTUAL key columns against
+    the claimant (hash equality is never trusted, DESIGN.md §4).  The probe
+    loop is a ``while_loop`` that exits as soon as every valid row is
+    resolved — typically 2-3 rounds at the ≤25% load factor implied by the
+    4x slot head-room.  Rows unresolved after ``max_probes`` (cardinality
+    far beyond ``out_capacity``) are counted as overflow, per the §2
+    contract.  O(n) per round, zero sorts.
+    """
+    from .table import hash_columns
+
+    cap = next(iter(cols.values())).shape[0]
+    mask = _mask_for(count, cap)
+    slots = 1 << max(int(4 * out_capacity - 1).bit_length(), 6)
+    h1, h2 = hash_columns([cols[k] for k in keys])
+    step = (h2 | jnp.uint32(1))  # odd => full cycle over pow2 table
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    big = jnp.int32(2**31 - 1)
+
+    def probe_slot(j):
+        return ((h1 + j.astype(jnp.uint32) * step)
+                & jnp.uint32(slots - 1)).astype(jnp.int32)
+
+    def cond(state):
+        j, _owner, _seg, unresolved = state
+        return (j < max_probes) & jnp.any(unresolved)
+
+    def body(state):
+        j, owner, seg, unresolved = state
+        slot = probe_slot(j)
+        idx = jnp.where(unresolved, slot, slots)
+        attempt = jnp.full((slots,), big, jnp.int32
+                           ).at[idx].min(rows, mode="drop")
+        owner = jnp.where(owner == big, attempt, owner)  # claimed slots stay
+        own = owner[slot]
+        same = own < big
+        safe = jnp.where(same, own, 0)
+        for k in keys:
+            same &= _key_bits_eq(cols[k], cols[k][safe])
+        resolved = unresolved & same
+        seg = jnp.where(resolved, slot, seg)
+        return j + 1, owner, seg, unresolved & ~same
+
+    state = (jnp.int32(0), jnp.full((slots,), big, jnp.int32),
+             jnp.full((cap,), slots, jnp.int32), mask)
+    _, owner, seg, unresolved = jax.lax.while_loop(cond, body, state)
+
+    occupied = owner < big
+    claimant = jnp.where(occupied, owner, 0)
+    slot_cols: Cols = {k: jnp.where(
+        occupied.reshape((-1,) + (1,) * (cols[k].ndim - 1)),
+        cols[k][claimant], jnp.zeros_like(cols[k][claimant])) for k in keys}
+    seg_count, sums, minmax = _segment_aggregates(cols, aggs, seg, slots + 1)
+    slot_cols.update(_agg_outputs(aggs, seg_count, sums, minmax, slots))
+    out, n_seg, trunc = compact_rows(slot_cols, occupied, out_capacity)
+    overflow = jnp.sum(unresolved, dtype=jnp.int32) + trunc
+    return out, n_seg, overflow
+
+
+def _local_groupby(cols: Cols, count, *, keys, aggs, out_capacity,
+                   method: str = "auto"):
+    """Local grouping, dispatching sort vs hash (DESIGN.md §4).
+
+    ``auto`` picks the sort-free hash table when the caller declared low
+    cardinality (``out_capacity`` at most a quarter of the row capacity —
+    the slot table then still fits the 4x head-room), else the lexsort
+    path.  Returns ``(columns, n_groups, overflow)``.  Overflow is a
+    data-loss indicator (zero iff nothing was dropped); its unit is groups
+    for capacity truncation and rows for hash-probe exhaustion, and which
+    groups survive truncation is deterministic per kernel but differs
+    between them (sorted-key order vs hash-slot order) — callers retrying
+    per the §2 contract should grow capacity, not interpret the count.
+    """
+    cap = next(iter(cols.values())).shape[0]
+    if method == "auto":
+        method = "hash" if out_capacity * 4 <= cap else "sort"
+    if method == "hash":
+        return _local_groupby_hash(cols, count, keys=keys, aggs=aggs,
+                                   out_capacity=out_capacity)
+    return _local_groupby_sort(cols, count, keys=keys, aggs=aggs,
+                               out_capacity=out_capacity)
 
 
 def _groupby_impl(cols, counts, *, keys, aggs, n_shards, bucket,
-                  mid_capacity, out_capacity, axis):
+                  mid_capacity, out_capacity, axis, elide, combine,
+                  partial_cap, combine_bucket, method):
     local_cols, count = _local_parts(cols, counts)
     ov = jnp.zeros((), jnp.int32)
-    if n_shards > 1:
-        local_cols, count, ov = hash_shuffle(
-            local_cols, count, keys, n_shards, bucket, mid_capacity, axis)
-    out, n_seg = _local_groupby(local_cols, count, keys=keys, aggs=aggs,
-                                out_capacity=out_capacity)
+    if n_shards > 1 and not elide:
+        if combine:
+            # map-side combine: pre-aggregate locally so only distinct
+            # (key, partial) rows enter the packed AllToAll
+            partial_aggs, merge_aggs = split_aggs(aggs)
+            pcols, pcount, o = _local_groupby(
+                local_cols, count, keys=keys, aggs=partial_aggs,
+                out_capacity=partial_cap, method=method)
+            ov += o
+            mid = n_shards * combine_bucket
+            pcols, pcount, o = hash_shuffle(
+                pcols, pcount, keys, n_shards, combine_bucket, mid, axis)
+            ov += o
+            out, n_seg, o = _local_groupby(
+                pcols, pcount, keys=keys, aggs=merge_aggs,
+                out_capacity=out_capacity, method=method)
+            ov += o
+            out = finalize_agg_cols(out, aggs, merge_aggs)
+        else:
+            local_cols, count, o = hash_shuffle(
+                local_cols, count, keys, n_shards, bucket, mid_capacity,
+                axis)
+            out, n_seg, o2 = _local_groupby(
+                local_cols, count, keys=keys, aggs=aggs,
+                out_capacity=out_capacity, method=method)
+            ov += o + o2
+    else:
+        # single shard, or rows already co-located on the keys: no exchange
+        out, n_seg, o = _local_groupby(local_cols, count, keys=keys,
+                                       aggs=aggs, out_capacity=out_capacity,
+                                       method=method)
+        ov += o
     if axis is not None:
         ov = spmd_allreduce(ov, axis)
     return out, n_seg[None], ov
@@ -441,23 +722,55 @@ def groupby_aggregate(dt: DistTable, keys: Sequence[str],
                       aggs: Sequence[Tuple[str, str]], *, ctx: HPTMTContext,
                       out_capacity: Optional[int] = None,
                       bucket_factor: float = 2.0,
+                      combine: "bool | str" = "auto",
+                      method: str = "auto",
                       ) -> Tuple[DistTable, jnp.ndarray]:
     """GroupBy + aggregate (Table III): shuffle-by-key + segment reduce.
 
     ``aggs`` is a list of ``(column, op)`` with op in sum/mean/min/max/count.
+
+    Two data-movement optimisations (DESIGN.md §4):
+
+      * **Shuffle elision** — when ``dt.partitioning`` records that rows are
+        already hash-co-located on exactly these ``keys`` (e.g. the output
+        of a join or shuffle on the same keys), the exchange is skipped
+        entirely and grouping is purely local.
+      * **Map-side combine** (``combine``) — pre-aggregate locally before
+        the exchange so only distinct ``(key, partial)`` rows cross the
+        network; mean decomposes into sum+count and is finalized after the
+        merge.  ``"auto"`` enables it when ``out_capacity`` declares
+        cardinality below the row capacity (which also shrinks the
+        AllToAll frame itself).
+
+    ``method`` selects the local grouping kernel: ``"sort"`` (lexsort +
+    segment runs), ``"hash"`` (sort-free slot table), or ``"auto"``.
     """
     for _, a in aggs:
         if a not in _SEGMENT_OPS:
             raise ValueError(f"unknown aggregate {a!r}")
+    if method not in ("auto", "sort", "hash"):
+        raise ValueError(f"unknown groupby method {method!r}")
+    if not isinstance(combine, bool) and combine != "auto":
+        raise ValueError(f"combine must be a bool or 'auto', got {combine!r}")
+    check_no_reserved(dt.column_names)
     n = ctx.n_shards
+    out_cap = out_capacity or dt.capacity
+    elide = _partitioned_on(dt, keys, ctx)
+    do_combine = combine if isinstance(combine, bool) else (
+        out_cap < dt.capacity)
+    partial_cap = (dt.capacity if out_cap >= dt.capacity
+                   else min(dt.capacity, out_cap * n))
     impl = functools.partial(
         _groupby_impl, keys=tuple(keys), aggs=tuple(aggs), n_shards=n,
         bucket=_bucket_capacity(dt.capacity, n, bucket_factor),
-        mid_capacity=dt.capacity, out_capacity=out_capacity or dt.capacity)
+        mid_capacity=dt.capacity, out_capacity=out_cap, elide=elide,
+        combine=do_combine, partial_cap=partial_cap,
+        combine_bucket=_bucket_capacity(partial_cap, n, bucket_factor),
+        method=method)
     cols, counts, overflow = _run_sharded(
         ctx, impl, (dt.columns, dt.counts),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
-    return DistTable(cols, counts), overflow
+    return DistTable(cols, counts, (tuple(keys), n)), overflow
 
 
 @operator("table.aggregate", Abstraction.TABLE)
@@ -539,18 +852,23 @@ def _membership(a_cols: Cols, amask, ah1, ah2, b_cols: Cols, bmask, bh1, bh2,
 
 
 def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
-                bbucket, mid_a, mid_b, out_capacity, axis):
+                bbucket, mid_a, mid_b, out_capacity, axis, shuffle_a,
+                shuffle_b):
     acols, an = _local_parts(ac, acnt)
     bcols, bn = _local_parts(bc, bcnt)
     ov = jnp.zeros((), jnp.int32)
 
     if n_shards > 1:
-        acols, an, o = hash_shuffle(acols, an, names, n_shards, abucket,
-                                    mid_a, axis, carry_hashes=True)
-        ov += o
-        bcols, bn, o = hash_shuffle(bcols, bn, names, n_shards, bbucket,
-                                    mid_b, axis, carry_hashes=True)
-        ov += o
+        # sides whose metadata proves co-location on the full schema skip
+        # their exchange (DESIGN.md §4)
+        if shuffle_a:
+            acols, an, o = hash_shuffle(acols, an, names, n_shards, abucket,
+                                        mid_a, axis, carry_hashes=True)
+            ov += o
+        if shuffle_b:
+            bcols, bn, o = hash_shuffle(bcols, bn, names, n_shards, bbucket,
+                                        mid_b, axis, carry_hashes=True)
+            ov += o
     # hashes: popped from the shuffle carry, or computed once here
     acols, ah1, ah2 = take_hashes(acols, names)
     bcols, bh1, bh2 = take_hashes(bcols, names)
@@ -602,11 +920,14 @@ def _make_setop(kind: str, opname: str, doc: str):
             abucket=_bucket_capacity(a.capacity, n, bucket_factor),
             bbucket=_bucket_capacity(b.capacity, n, bucket_factor),
             mid_a=a.capacity, mid_b=b.capacity,
-            out_capacity=out_capacity or default_out)
+            out_capacity=out_capacity or default_out,
+            shuffle_a=not _partitioned_on(a, names, ctx),
+            shuffle_b=not _partitioned_on(b, names, ctx))
         cols, counts, overflow = _run_sharded(
             ctx, impl, (a.columns, a.counts, b.columns, b.counts),
             out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
-        return DistTable(cols, counts), overflow
+        # output rows keep the shard their full-row hash assigned
+        return DistTable(cols, counts, (names, n)), overflow
 
     op.__doc__ = doc
     op.__name__ = kind

@@ -7,6 +7,7 @@ DataFrame; operators run SPMD over the context's mesh.  ``to_numpy()`` /
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -23,10 +24,27 @@ class DataFrame:
     # -- construction ----------------------------------------------------
     @classmethod
     def from_dict(cls, data: Dict[str, np.ndarray], ctx: HPTMTContext,
-                  capacity: Optional[int] = None) -> "DataFrame":
+                  capacity: Optional[int] = None,
+                  bucket_factor: float = 1.0) -> "DataFrame":
+        """Build a DataFrame, block-partitioned over the context's shards.
+
+        ``bucket_factor`` over-allocates each shard's capacity beyond
+        ``capacity`` (or the exact ``ceil(rows / n_shards)`` default) so
+        that a *later* shuffle (join, groupby, sort) has head-room for
+        hash skew — without it, a shard receiving more than its exact
+        share overflows at the operator and raises.  A
+        ``capacity``/``bucket_factor`` too small to hold the input rows
+        themselves is rejected eagerly here, at the API layer, instead of
+        silently truncating inside ``DistTable.from_local``.
+        """
         cols = {k: jnp.asarray(v) for k, v in data.items()}
         t = Table.from_arrays(cols)
-        per = capacity or -(-t.capacity // ctx.n_shards)
+        per = math.ceil(
+            (capacity or -(-t.capacity // ctx.n_shards)) * bucket_factor)
+        if per * ctx.n_shards < t.capacity:
+            raise ValueError(
+                f"per-shard capacity {per} x {ctx.n_shards} shards cannot "
+                f"hold {t.capacity} rows — raise capacity or bucket_factor")
         return cls(DistTable.from_local(t, ctx, capacity=per), ctx)
 
     # -- metadata ------------------------------------------------------------
@@ -40,6 +58,16 @@ class DataFrame:
     @property
     def table(self) -> DistTable:
         return self._t
+
+    @property
+    def partitioning(self):
+        """``(hash_keys, n_shards)`` when rows are hash-co-located, else None.
+
+        Operators on matching keys (join/groupby/set ops after a
+        ``repartition`` or another keyed operator) skip their shuffle
+        entirely (DESIGN.md §4).
+        """
+        return self._t.partitioning
 
     # -- relational operators (eager) ------------------------------------------
     def select(self, predicate: Callable) -> "DataFrame":
@@ -62,6 +90,17 @@ class DataFrame:
         out, ov = table_ops.groupby_aggregate(self._t, keys, aggs,
                                               ctx=self._ctx, **kw)
         self._check(ov, "groupby")
+        return DataFrame(out, self._ctx)
+
+    def repartition(self, keys: Sequence[str], **kw) -> "DataFrame":
+        """Hash-shuffle rows so equal ``keys`` share a shard (Fig 2).
+
+        The result records its partitioning, so chained keyed operators on
+        the same keys elide their shuffles.  A no-op when already
+        partitioned on exactly these keys.
+        """
+        out, ov = table_ops.shuffle(self._t, keys, ctx=self._ctx, **kw)
+        self._check(ov, "shuffle")
         return DataFrame(out, self._ctx)
 
     def sort_values(self, key: str, ascending: bool = True, **kw) -> "DataFrame":

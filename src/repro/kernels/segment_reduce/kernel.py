@@ -53,6 +53,30 @@ def _kernel(seg_ref, val_ref, out_ref, *, op: str, block_s: int):
         out_ref[...] = jnp.maximum(out_ref[...], cur.astype(out_ref.dtype))
 
 
+def _kernel_fused(seg_ref, val_ref, out_ref, *, block_s: int):
+    """Multi-lane sum: one one-hot matmul reduces all value lanes at once.
+
+    ``val_ref`` is ``(block_n, lanes)``; the same ``(block_s, block_n)``
+    one-hot contracts every lane in a single MXU pass, so the per-element
+    cost of extra aggregate columns is amortised against the one-hot build.
+    """
+    s = pl.program_id(0)
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]                      # (block_n,) int32
+    val = val_ref[...]                      # (block_n, lanes) float32
+    local = seg - s * block_s
+    block_n = seg.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, block_n), 0)
+    onehot = (rows == local[None, :]).astype(jnp.float32)
+    out_ref[...] += jnp.dot(onehot, val.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
 def segment_reduce_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
                           num_segments: int, op: str = "sum", *,
                           block_n: int = 512, block_s: int = 512,
@@ -79,6 +103,38 @@ def segment_reduce_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block_s,), lambda s, i: (s,)),
         out_shape=jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        interpret=interpret,
+    )(segs, vals)
+    return out[:num_segments]
+
+
+def segment_reduce_fused_pallas(values: jnp.ndarray,
+                                segment_ids: jnp.ndarray,
+                                num_segments: int, *, block_n: int = 512,
+                                block_s: int = 512,
+                                interpret: bool = False) -> jnp.ndarray:
+    """values (N, L) f32, segment_ids (N,) i32 → (num_segments, L) f32 sums.
+
+    All lanes reduce through one one-hot matmul per grid cell (MXU), so a
+    GroupBy with several sum/count/mean aggregates costs one kernel pass.
+    """
+    n, lanes = values.shape
+    n_pad = -(-n // block_n) * block_n
+    s_pad = -(-num_segments // block_s) * block_s
+    vals = jnp.pad(values.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    segs = jnp.pad(segment_ids.astype(jnp.int32), (0, n_pad - n),
+                   constant_values=s_pad)
+    segs = jnp.where(segs < 0, s_pad, segs)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_fused, block_s=block_s),
+        grid=(s_pad // block_s, n_pad // block_n),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda s, i: (i,)),
+            pl.BlockSpec((block_n, lanes), lambda s, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, lanes), lambda s, i: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, lanes), jnp.float32),
         interpret=interpret,
     )(segs, vals)
     return out[:num_segments]

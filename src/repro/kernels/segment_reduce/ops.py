@@ -27,3 +27,19 @@ def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
         return _kernel.segment_reduce_pallas(
             values, segment_ids, num_segments, op, interpret=not _on_tpu())
     return _ref.segment_reduce(values, segment_ids, num_segments, op)
+
+
+@functools.partial(jax.jit, static_argnums=(2,), static_argnames=("force",))
+def segment_reduce_fused(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                         num_segments: int,
+                         force: str | None = None) -> jnp.ndarray:
+    """Sum-reduce ``(N, L)`` value lanes by segment in one pass.
+
+    The GroupBy fast path: every sum-combining aggregate (sum, count, the
+    sum/count halves of mean) rides one scatter (CPU/GPU) or one one-hot
+    matmul sweep (TPU Pallas) instead of one reduction per column.
+    """
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _kernel.segment_reduce_fused_pallas(
+            values, segment_ids, num_segments, interpret=not _on_tpu())
+    return _ref.segment_reduce_fused(values, segment_ids, num_segments)

@@ -21,3 +21,15 @@ def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
     if op == "max":
         return jax.ops.segment_max(values, segment_ids, num_segments)
     raise ValueError(f"unknown op {op!r}")
+
+
+def segment_reduce_fused(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                         num_segments: int) -> jnp.ndarray:
+    """Sum-reduce ``(N, L)`` values by segment in ONE scatter.
+
+    XLA lowers a leading-axis ``segment_sum`` over a 2-D operand to a single
+    scatter-add whose cost is dominated by the row count, not the lane
+    count — measurably cheaper than one scatter per aggregate column
+    (the GroupBy map-side-combine hot loop, DESIGN.md §4).
+    """
+    return jax.ops.segment_sum(values, segment_ids, num_segments)
