@@ -5,14 +5,26 @@ data, the ``to_numpy``/``to_jax`` bridge hands it to array land, a gradient
 loop runs on array operators, and the model "synchronizes" with AllReduce —
 all the same code single-device or on a mesh.
 
+Part 2 adds the storage layer (DESIGN.md §5): a generated on-disk dataset
+is scanned back with projection + predicate pushdown, joined, aggregated,
+and bridged to arrays — write → scan → join → groupby → ``to_jax()``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import sys
+import tempfile
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import local_context, array_ops
 from repro.dataframe.frame import DataFrame
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "scripts"))
+from make_dataset import make_events_dataset  # noqa: E402
 
 
 def main():
@@ -62,6 +74,31 @@ def main():
     loss = float(jnp.mean((feats @ w_synced - y) ** 2))
     print(f"fitted w={np.asarray(w_synced).round(3)}  mse={loss:.4f}")
     assert np.isfinite(loss)
+
+    # --- 4. storage layer: write → scan → join → groupby → to_jax ----------
+    # (DESIGN.md §5; paper §VI names Arrow/Parquet as the interop keystone)
+    from repro.io import pred
+
+    with tempfile.TemporaryDirectory() as root:
+        make_events_dataset(root, n_rows=20_000, n_users=200, seed=1)
+        # pushdown scan: only 3 of 6 event columns materialize, and whole
+        # fragments outside the day range are skipped via min/max stats
+        events = DataFrame.read_parquet(
+            os.path.join(root, "events"), ctx,
+            columns=["user_id", "day", "value"],
+            predicate=pred("day", "<", 7))
+        users = DataFrame.read_parquet(os.path.join(root, "users"), ctx)
+        print(f"scanned events: {len(events)} rows (day<7), "
+              f"users: {len(users)}")
+
+        per_user = (events.join(users, on=["user_id"])
+                    .groupby(["segment"], [("value", "mean"),
+                                           ("value", "count")]))
+        mat = per_user.to_jax(["value_mean", "value_count"])
+        weighted = float(jnp.sum(mat[:, 0] * mat[:, 1]) / jnp.sum(mat[:, 1]))
+        print(f"segments: {len(per_user)}, "
+              f"count-weighted mean value: {weighted:.4f}")
+        assert np.isfinite(weighted)
     print("quickstart OK")
 
 

@@ -68,6 +68,21 @@ class TSet:
             chunks.append(DistTable(cols, counts, dt.partitioning))
         return cls.from_chunks(chunks, ctx)
 
+    @classmethod
+    def from_scan(cls, scan, ctx: Optional[HPTMTContext] = None) -> "TSet":
+        """Source a TSet from a storage ``ScanSource`` (repro.io.scan).
+
+        The scan's fragment rounds become the chunk stream — the chunked
+        ingest path (paper Fig 5): each operator stage works on one
+        bounded-size chunk at a time (the source list itself is
+        materialized, as with every TSet source).  Chunks inherit the
+        scan's partitioned-re-entry metadata, so a groupby/join on the
+        partition keys elides its merge shuffle (DESIGN.md §4/§5).
+        Duck-typed (anything with ``.chunks()`` and ``.ctx``) so core
+        never imports the io layer.
+        """
+        return cls.from_chunks(scan.chunks(), ctx or scan.ctx)
+
     # -- piecewise (streaming) operators ------------------------------------
     def select(self, predicate: Callable) -> "TSet":
         return TSet(_Node("select", (self._node,), {"pred": predicate}),

@@ -262,6 +262,35 @@ class DistTable:
             dt = dt.with_sharding(ctx)
         return dt
 
+    @classmethod
+    def from_shard_tables(cls, tables: Sequence[Table], ctx: HPTMTContext,
+                          partitioning: Partitioning = None) -> "DistTable":
+        """Assemble per-shard local tables into a DistTable.
+
+        The inverse of :meth:`shard_table`: ``tables[i]`` becomes shard
+        ``i``'s block (padded to the common capacity).  Used by the storage
+        scan to place on-disk shard files back onto their shards —
+        ``partitioning`` is attached verbatim, so callers assert the layout
+        evidence truthfully (DESIGN.md §4/§5).
+        """
+        if len(tables) != ctx.n_shards:
+            raise ValueError(f"{len(tables)} shard tables for a "
+                             f"{ctx.n_shards}-shard context")
+        names = tables[0].column_names
+        for i, t in enumerate(tables[1:], 1):
+            if t.column_names != names:
+                raise ValueError(f"shard {i} columns {t.column_names} != "
+                                 f"shard 0 columns {names}")
+        cap = max(t.capacity for t in tables)
+        cols = {k: jnp.concatenate([_pad_axis0(t.columns[k], cap)
+                                    for t in tables], axis=0)
+                for k in names}
+        counts = jnp.stack([jnp.minimum(t.num_rows, cap) for t in tables])
+        dt = cls(cols, counts, partitioning)
+        if ctx.mesh is not None:
+            dt = dt.with_sharding(ctx)
+        return dt
+
     def with_sharding(self, ctx: HPTMTContext) -> "DistTable":
         if ctx.mesh is None:
             return self

@@ -33,34 +33,71 @@ class CorpusConfig:
     seed: int = 0
 
 
-def synthetic_corpus(ccfg: CorpusConfig, ctx: HPTMTContext
-                     ) -> Dict[str, DistTable]:
-    """Two-table corpus: docs metadata + flat token rows."""
+def synthetic_corpus_arrays(ccfg: CorpusConfig
+                            ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Pure-numpy corpus generation: ``{"docs": cols, "tokens": cols}``.
+
+    Shared by the in-memory path (:func:`synthetic_corpus`) and the
+    on-disk dataset writer (``scripts/make_dataset.py``), so the scan
+    ingest benchmark and the training pipeline read identical data.
+    """
     rng = np.random.default_rng(ccfg.seed)
     lens = np.clip(rng.poisson(ccfg.mean_doc_len, ccfg.n_docs), 8, None)
     quality = rng.uniform(size=ccfg.n_docs).astype(np.float32)
-    docs = Table.from_arrays({
-        "doc_id": jnp.arange(ccfg.n_docs, dtype=jnp.int32),
-        "quality": jnp.asarray(quality),
-        "n_tokens": jnp.asarray(lens.astype(np.int32)),
-    })
-    total = int(lens.sum())
     doc_ids = np.repeat(np.arange(ccfg.n_docs), lens).astype(np.int32)
     positions = np.concatenate([np.arange(l) for l in lens]).astype(np.int32)
     # token stream with mild structure so small models can learn it
     toks = ((doc_ids * 31 + positions * 7) % (ccfg.vocab_size - 2) + 1
             ).astype(np.int32)
-    tokens = Table.from_arrays({
-        "doc_id": jnp.asarray(doc_ids),
-        "position": jnp.asarray(positions),
-        "token": jnp.asarray(toks),
-    })
+    return {
+        "docs": {"doc_id": np.arange(ccfg.n_docs, dtype=np.int32),
+                 "quality": quality,
+                 "n_tokens": lens.astype(np.int32)},
+        "tokens": {"doc_id": doc_ids, "position": positions, "token": toks},
+    }
+
+
+def synthetic_corpus(ccfg: CorpusConfig, ctx: HPTMTContext
+                     ) -> Dict[str, DistTable]:
+    """Two-table corpus: docs metadata + flat token rows."""
+    arrays = synthetic_corpus_arrays(ccfg)
+    docs = Table.from_arrays(
+        {k: jnp.asarray(v) for k, v in arrays["docs"].items()})
+    tokens = Table.from_arrays(
+        {k: jnp.asarray(v) for k, v in arrays["tokens"].items()})
+    total = arrays["tokens"]["doc_id"].shape[0]
     p = ctx.n_shards
     return {
         "docs": DistTable.from_local(docs, ctx,
                                      capacity=-(-ccfg.n_docs // p)),
         "tokens": DistTable.from_local(tokens, ctx, capacity=-(-total // p)),
     }
+
+
+def disk_corpus(root: str, ctx: HPTMTContext,
+                quality_threshold: Optional[float] = None,
+                ) -> Dict[str, DistTable]:
+    """Scan a corpus written as on-disk datasets (``root/docs``,
+    ``root/tokens``) back into distributed tables — the realistic ingest
+    path (paper §VI: Parquet/Arrow interop feeding the table operators).
+
+    Predicate pushdown happens at the storage layer: with a
+    ``quality_threshold`` the docs scan skips whole fragments whose
+    quality max falls below it, before any rows materialize.
+    """
+    import os
+
+    from repro.io import pred, read_dataset
+
+    doc_pred = (pred("quality", ">=", float(quality_threshold))
+                if quality_threshold is not None else None)
+    docs, ov_d, _ = read_dataset(os.path.join(root, "docs"), ctx=ctx,
+                                 predicate=doc_pred)
+    tokens, ov_t, _ = read_dataset(os.path.join(root, "tokens"), ctx=ctx)
+    if ov_d or ov_t:
+        raise RuntimeError(f"corpus scan overflowed ({int(ov_d + ov_t)} "
+                           f"rows) — raise the scan capacity")
+    return {"docs": docs, "tokens": tokens}
 
 
 def preprocess(corpus: Dict[str, DistTable], ccfg: CorpusConfig,
@@ -100,9 +137,14 @@ def batch_iterator(stream: np.ndarray, batch: int, seq_len: int,
 
 def make_training_data(cfg: ModelConfig, ctx: HPTMTContext, batch: int,
                        seq_len: int, ccfg: Optional[CorpusConfig] = None,
+                       data_root: Optional[str] = None,
                        ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Batches from the synthetic corpus, or — with ``data_root`` — from
+    an on-disk dataset corpus (``scripts/make_dataset.py``) via the
+    storage scan ingest path."""
     ccfg = ccfg or CorpusConfig(vocab_size=cfg.vocab_size)
-    corpus = synthetic_corpus(ccfg, ctx)
+    corpus = (disk_corpus(data_root, ctx) if data_root is not None
+              else synthetic_corpus(ccfg, ctx))
     stream = preprocess(corpus, ccfg, ctx)
     base = batch_iterator(stream, batch, seq_len, seed=ccfg.seed)
     if cfg.frontend is None and not cfg.is_encoder_decoder:

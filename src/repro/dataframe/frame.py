@@ -37,6 +37,16 @@ class DataFrame:
         themselves is rejected eagerly here, at the API layer, instead of
         silently truncating inside ``DistTable.from_local``.
         """
+        lengths = {k: np.shape(v)[0] if np.ndim(v) else 0
+                   for k, v in data.items()}
+        if len(set(lengths.values())) > 1:
+            common = max(set(lengths.values()),
+                         key=lambda n: sum(v == n for v in lengths.values()))
+            ragged = sorted(f"{k} has {n} rows" for k, n in lengths.items()
+                            if n != common)
+            raise ValueError(
+                f"ragged column lengths: {ragged} vs {common} rows in the "
+                f"other column(s) — every column must have the same length")
         cols = {k: jnp.asarray(v) for k, v in data.items()}
         t = Table.from_arrays(cols)
         per = math.ceil(
@@ -46,6 +56,77 @@ class DataFrame:
                 f"per-shard capacity {per} x {ctx.n_shards} shards cannot "
                 f"hold {t.capacity} rows — raise capacity or bucket_factor")
         return cls(DistTable.from_local(t, ctx, capacity=per), ctx)
+
+    # -- storage & Arrow interop (repro.io, DESIGN.md §5) -----------------
+    @classmethod
+    def read_parquet(cls, path: str, ctx: HPTMTContext, *,
+                     columns: Optional[Sequence[str]] = None,
+                     predicate=None, capacity: Optional[int] = None,
+                     bucket_factor: float = 1.0,
+                     allow_narrowing: bool = False) -> "DataFrame":
+        """Scan an on-disk dataset (Parquet or native ``.hpt`` — format
+        auto-detected) with projection + predicate pushdown.
+
+        A dataset written with ``partition_by`` re-enters with its
+        ``partitioning`` metadata attached when the context matches, so a
+        following ``join``/``groupby`` on the partition keys moves no data
+        (DESIGN.md §5.3).
+        """
+        from repro.io import read_dataset
+
+        dt, overflow, _ = read_dataset(
+            path, ctx=ctx, columns=columns, predicate=predicate,
+            capacity=capacity, bucket_factor=bucket_factor,
+            allow_narrowing=allow_narrowing)
+        cls._check(overflow, "scan")
+        return cls(dt, ctx)
+
+    read_dataset = read_parquet  # format-neutral alias
+
+    def to_parquet(self, path: str, *,
+                   partition_by: Optional[Sequence[str]] = None,
+                   rows_per_group: Optional[int] = None,
+                   format: Optional[str] = "parquet") -> "DataFrame":
+        """Write as a sharded Parquet dataset (``format="hpt"`` for the
+        dependency-free native container; ``None``/"auto" picks parquet
+        when pyarrow is available).
+
+        ``partition_by`` hash-shuffles rows first (elided when already
+        partitioned) and records the layout in the dataset manifest, so a
+        later :meth:`read_parquet` on a matching context restores the
+        shuffle-elision evidence.
+        """
+        from repro.io import write_dist_table
+
+        overflow = write_dist_table(self._t, path, ctx=self._ctx,
+                                    format=format, partition_by=partition_by,
+                                    rows_per_group=rows_per_group)
+        self._check(overflow, "to_parquet")
+        return self
+
+    def to_hpt(self, path: str, *,
+               partition_by: Optional[Sequence[str]] = None,
+               rows_per_group: Optional[int] = None) -> "DataFrame":
+        return self.to_parquet(path, partition_by=partition_by,
+                               rows_per_group=rows_per_group, format="hpt")
+
+    @classmethod
+    def from_arrow(cls, arrow_table, ctx: HPTMTContext,
+                   capacity: Optional[int] = None,
+                   bucket_factor: float = 1.0) -> "DataFrame":
+        """Ingest a pyarrow Table (zero-copy columns, nulls rejected
+        eagerly — repro.io.arrow)."""
+        from repro.io import from_arrow as _from_arrow
+
+        cols, _ = _from_arrow(arrow_table)
+        return cls.from_dict(cols, ctx, capacity=capacity,
+                             bucket_factor=bucket_factor)
+
+    def to_arrow(self):
+        """Materialize valid rows as a pyarrow Table (paper §VI interop)."""
+        from repro.io import to_arrow as _to_arrow
+
+        return _to_arrow(self.to_numpy())
 
     # -- metadata ------------------------------------------------------------
     @property

@@ -1,0 +1,377 @@
+"""Pushdown-aware sharded scan operator (DESIGN.md §5.4).
+
+``ScanSource`` turns an on-disk :class:`~repro.io.dataset.Dataset` into a
+:class:`DistTable` (eager) or a stream of chunk tables (out-of-core,
+via ``TSet``), planning everything from metadata before touching a data
+page:
+
+  * **Projection pushdown** — only projected columns (plus columns the
+    predicate needs) are read; unprojected columns are never materialized
+    (Parquet skips their column chunks, ``.hpt`` seeks past their
+    buffers).
+  * **Predicate pushdown** — fragments (Parquet row groups / ``.hpt``
+    files) whose min/max stats prove no row can match are skipped whole;
+    surviving fragments get an exact residual row filter after load.
+    Stats-based pruning is conservative: missing stats never prune.
+  * **Capacity planning** — per-shard static capacity is computed from
+    the row counts of the fragments assigned to each shard; an explicit
+    smaller ``capacity`` engages the §2 overflow contract (excess rows
+    are counted and dropped in original row order, never corrupted).
+  * **Partitioned re-entry** — when the manifest's hash-partitioning
+    evidence matches the context (same ordered keys, same shard count,
+    every key column projected), fragments are placed back on the shard
+    that wrote them and the result carries ``DistTable.partitioning``:
+    a following join/groupby on those keys elides its shuffle
+    (DESIGN.md §4).
+
+Planning and I/O run on the host in numpy; rows enter jax (and the
+fixed-capacity static-shape world) only at table assembly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import operator as _op
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.table import DistTable, Partitioning, Table
+from .dataset import Dataset, Fragment, open_dataset
+
+_OPS = {"<": _op.lt, "<=": _op.le, ">": _op.gt, ">=": _op.ge,
+        "==": _op.eq, "!=": _op.ne}
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnPredicate:
+    """One comparison ``column <op> value``; a list of these is an AND."""
+    column: str
+    op: str
+    value: Union[int, float, bool]
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unknown predicate op {self.op!r}; "
+                             f"expected one of {sorted(_OPS)}")
+
+    def maybe_satisfied(self, stats: Optional[Tuple]) -> bool:
+        """Can ANY row of a fragment with these min/max stats match?
+
+        ``None`` stats (absent, NaN-poisoned, or non-scalar column) never
+        prune — conservative.
+        """
+        if stats is None:
+            return True
+        mn, mx = stats
+        v = self.value
+        if self.op == "<":
+            return mn < v
+        if self.op == "<=":
+            return mn <= v
+        if self.op == ">":
+            return mx > v
+        if self.op == ">=":
+            return mx >= v
+        if self.op == "==":
+            return mn <= v <= mx
+        return not (mn == v == mx)  # "!="
+
+    def mask(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        """Exact residual row filter on loaded host columns."""
+        return _OPS[self.op](cols[self.column], self.value)
+
+
+def pred(column: str, op: str, value) -> ColumnPredicate:
+    """Shorthand: ``pred("day", "<", 7)``."""
+    return ColumnPredicate(column, op, value)
+
+
+def _normalize_predicate(predicate) -> Tuple[ColumnPredicate, ...]:
+    if predicate is None:
+        return ()
+    if isinstance(predicate, ColumnPredicate):
+        return (predicate,)
+    if isinstance(predicate, tuple) and len(predicate) == 3 \
+            and isinstance(predicate[0], str):
+        return (ColumnPredicate(*predicate),)
+    return tuple(p if isinstance(p, ColumnPredicate)
+                 else ColumnPredicate(*p) for p in predicate)
+
+
+@dataclasses.dataclass
+class ScanStats:
+    """Observable pushdown accounting (asserted by tests/benchmarks)."""
+    files_total: int = 0
+    row_groups_total: int = 0
+    row_groups_skipped: int = 0
+    columns_total: int = 0
+    columns_read: int = 0
+    rows_on_disk: int = 0      # dataset total per metadata
+    rows_scanned: int = 0      # materialized from surviving fragments
+    rows_selected: int = 0     # after the residual predicate
+    rows_overflowed: int = 0   # dropped by the §2 capacity contract
+
+
+class ScanSource:
+    """Plan + execute a sharded, pushdown-aware scan of a dataset."""
+
+    def __init__(self, dataset: Union[Dataset, str], *, ctx,
+                 columns: Optional[Sequence[str]] = None,
+                 predicate=None, capacity: Optional[int] = None,
+                 bucket_factor: float = 1.0,
+                 allow_narrowing: bool = False):
+        if isinstance(dataset, str):
+            dataset = open_dataset(dataset)
+        self.dataset = dataset
+        self.ctx = ctx
+        self.predicate = _normalize_predicate(predicate)
+        self.allow_narrowing = allow_narrowing
+        schema = dataset.schema
+        self.out_columns: Tuple[str, ...] = (
+            tuple(columns) if columns is not None else schema.names)
+        missing = [c for c in self.out_columns if c not in schema]
+        if missing:
+            raise KeyError(f"projected columns {missing} not in dataset "
+                           f"schema {list(schema.names)}")
+        for p in self.predicate:
+            if p.column not in schema:
+                raise KeyError(f"predicate column {p.column!r} not in "
+                               f"dataset schema {list(schema.names)}")
+            if schema[p.column].trailing:
+                raise ValueError(f"predicate column {p.column!r} has "
+                                 f"trailing dims {schema[p.column].trailing}"
+                                 f" — predicates apply to scalar columns")
+        # read set = projection ∪ predicate columns (pred-only columns are
+        # dropped after filtering, never returned)
+        self.read_columns: Tuple[str, ...] = tuple(dict.fromkeys(
+            list(self.out_columns) + [p.column for p in self.predicate]))
+        self.stats = ScanStats(
+            files_total=dataset.n_files,
+            row_groups_total=len(dataset.fragments),
+            columns_total=len(schema.names),
+            rows_on_disk=dataset.num_rows)
+        self._plan(capacity, bucket_factor)
+
+    # -- planning (metadata only) ------------------------------------------
+    def _plan(self, capacity: Optional[int], bucket_factor: float) -> None:
+        p = self.ctx.n_shards
+        # "!=" on a float column must never prune: NaN rows satisfy it,
+        # but writers may compute min/max ignoring NaNs (Parquet does), so
+        # min == max == v does NOT prove every row equals v.  All other
+        # ops are NaN-safe (a NaN row can never satisfy them).  The
+        # residual filter still applies "!=" exactly.
+        prunable = [pr for pr in self.predicate
+                    if not (pr.op == "!="
+                            and self.dataset.schema[pr.column].np_dtype.kind
+                            == "f")]
+        kept: List[Fragment] = []
+        for frag in self.dataset.fragments:
+            if all(pr.maybe_satisfied(frag.stats.get(pr.column))
+                   for pr in prunable):
+                kept.append(frag)
+        self.stats.row_groups_skipped = (
+            len(self.dataset.fragments) - len(kept))
+        self.stats.columns_read = len(self.read_columns) if kept else 0
+
+        # partitioned re-entry: manifest evidence + matching context +
+        # every hash-key column surviving the projection (same rule as
+        # table_ops.project, DESIGN.md §4)
+        dpart = self.dataset.partitioning
+        self._partitioning: Partitioning = None
+        use_manifest_placement = (
+            dpart is not None and dpart[1] == p
+            and all(f.shard is not None and 0 <= f.shard < p
+                    for f in self.dataset.fragments))
+        if use_manifest_placement and set(dpart[0]) <= set(self.out_columns):
+            self._partitioning = dpart
+
+        self._by_shard: List[List[Fragment]] = [[] for _ in range(p)]
+        for i, frag in enumerate(kept):
+            shard = frag.shard if use_manifest_placement else i % p
+            self._by_shard[shard].append(frag)
+
+        # bucket_factor over-allocates like DataFrame.from_dict: head-room
+        # for a *later* shuffle's hash skew (a 100%-occupancy table gives
+        # downstream exchanges zero slack and overflows on skewed keys)
+        planned = max([sum(f.rows for f in fr) for fr in self._by_shard]
+                      + [1])
+        self.shard_capacity = int(capacity) if capacity is not None \
+            else math.ceil(planned * bucket_factor)
+
+    @property
+    def partitioning(self) -> Partitioning:
+        return self._partitioning
+
+    # -- materialization ----------------------------------------------------
+    def _reset_io_stats(self) -> None:
+        """I/O counters are per-materialization, not cumulative — calling
+        ``to_dist_table`` and then ``chunks`` must not double-count."""
+        self.stats.rows_scanned = 0
+        self.stats.rows_selected = 0
+        self.stats.rows_overflowed = 0
+
+    def _load_run(self, frags: Sequence[Fragment]
+                  ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Load consecutive fragments of ONE file in a single read.
+
+        Parquet row groups of the same shard file batch into one
+        ``read_row_groups`` call — one file open / footer parse per run,
+        not per fragment.
+        """
+        if frags[0].format == "hpt":
+            from .native import read_hpt
+
+            cols, n = read_hpt(frags[0].path, self.read_columns)
+        else:
+            from .parquet import read_row_groups
+
+            cols, n = read_row_groups(frags[0].path,
+                                      [f.row_group for f in frags],
+                                      self.read_columns)
+        self.stats.rows_scanned += n
+        if self.predicate:
+            keep = np.ones(n, bool)
+            for pr in self.predicate:
+                keep &= pr.mask(cols)
+            cols = {k: v[keep] for k, v in cols.items()}
+            n = int(keep.sum())
+        self.stats.rows_selected += n
+        return {k: cols[k] for k in self.out_columns}, n
+
+    def _load_fragments(self, frags: Sequence[Fragment]
+                        ) -> List[Tuple[Dict[str, np.ndarray], int]]:
+        runs: List[List[Fragment]] = []
+        for f in frags:
+            if (runs and f.format == "parquet"
+                    and runs[-1][-1].path == f.path):
+                runs[-1].append(f)
+            else:
+                runs.append([f])
+        return [self._load_run(r) for r in runs]
+
+    def _empty_shard(self) -> Tuple[Dict[str, np.ndarray], int]:
+        schema = self.dataset.schema
+        return {c: np.zeros((0,) + schema[c].trailing, schema[c].np_dtype)
+                for c in self.out_columns}, 0
+
+    def _shard_table(self, frags: Sequence[Fragment],
+                     capacity: int) -> Tuple[Table, int]:
+        """Concatenate a shard's fragments (original row order), truncate
+        at ``capacity`` per the §2 count-and-drop contract."""
+        parts = self._load_fragments(frags) if frags else []
+        if not parts:
+            cols, n = self._empty_shard()
+        else:
+            n = sum(pn for _, pn in parts)
+            cols = {c: np.concatenate([pc[c] for pc, _ in parts], axis=0)
+                    for c in self.out_columns}
+        overflow = max(0, n - capacity)
+        if overflow:
+            cols = {k: v[:capacity] for k, v in cols.items()}
+            n = capacity
+            self.stats.rows_overflowed += overflow
+        jcols = {k: _to_jax_column(k, v, self.allow_narrowing)
+                 for k, v in cols.items()}
+        return Table.from_arrays(jcols, num_rows=n, capacity=capacity), \
+            overflow
+
+    def to_dist_table(self) -> Tuple[DistTable, int]:
+        """Materialize the whole scan → ``(DistTable, overflow)``."""
+        self._reset_io_stats()
+        overflow = 0
+        tables = []
+        for frags in self._by_shard:
+            t, ov = self._shard_table(frags, self.shard_capacity)
+            tables.append(t)
+            overflow += ov
+        dt = DistTable.from_shard_tables(tables, self.ctx,
+                                         partitioning=self._partitioning)
+        return dt, overflow
+
+    def chunks(self):
+        """Chunked form: lazily yield one DistTable per fragment *round*.
+
+        Round ``r`` holds every shard's ``r``-th surviving fragment (or an
+        empty block), sized to that round's largest fragment.  The
+        generator loads one round at a time, so iterating and processing
+        chunk-by-chunk keeps the I/O working set at one fragment round
+        (paper Fig 5); a consumer that collects all chunks (``TSet``
+        sources, barrier operators) bounds per-*operator* state by the
+        chunk size but holds the chunk list itself.  Chunks inherit the
+        partitioned-re-entry metadata, so a downstream combiner barrier
+        can elide its merge shuffle.
+        """
+        self._reset_io_stats()
+        rounds = max((len(fr) for fr in self._by_shard), default=0)
+        for r in range(rounds):
+            frags = [fr[r] if r < len(fr) else None
+                     for fr in self._by_shard]
+            cap = max((f.rows for f in frags if f is not None), default=1)
+            cap = max(cap, 1)
+            tables = []
+            for f in frags:
+                if f is None:
+                    cols, n = self._empty_shard()
+                    jcols = {k: _to_jax_column(k, v, self.allow_narrowing)
+                             for k, v in cols.items()}
+                    tables.append(Table.from_arrays(jcols, num_rows=0,
+                                                    capacity=cap))
+                else:
+                    t, _ = self._shard_table([f], cap)
+                    tables.append(t)
+            yield DistTable.from_shard_tables(
+                tables, self.ctx, partitioning=self._partitioning)
+
+    def to_tset(self):
+        """The TSet bridge for out-of-core dataflow pipelines."""
+        from repro.core.dataflow import TSet
+
+        return TSet.from_scan(self)
+
+
+def read_dataset(path: str, *, ctx, columns: Optional[Sequence[str]] = None,
+                 predicate=None, capacity: Optional[int] = None,
+                 bucket_factor: float = 1.0, allow_narrowing: bool = False,
+                 ) -> Tuple[DistTable, int, ScanStats]:
+    """One-call scan: ``(DistTable, overflow, stats)``."""
+    src = ScanSource(path, ctx=ctx, columns=columns, predicate=predicate,
+                     capacity=capacity, bucket_factor=bucket_factor,
+                     allow_narrowing=allow_narrowing)
+    dt, overflow = src.to_dist_table()
+    return dt, overflow, src.stats
+
+
+# ---------------------------------------------------------------------------
+# host → jax dtype boundary
+# ---------------------------------------------------------------------------
+_NARROW = {"int64": np.int32, "uint64": np.uint32, "float64": np.float32}
+
+
+def _to_jax_column(name: str, arr: np.ndarray, allow_narrowing: bool):
+    """Move a host column into jax, refusing silent 64→32-bit data loss.
+
+    With jax x64 disabled (the default), ``jnp.asarray`` would silently
+    narrow 64-bit columns.  We narrow explicitly and — unless
+    ``allow_narrowing`` — verify the round trip is lossless, raising an
+    eager, named error otherwise (the storage layer never corrupts
+    silently, DESIGN.md §2/§5).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if arr.dtype.name in _NARROW and not jax.config.jax_enable_x64:
+        cast = arr.astype(_NARROW[arr.dtype.name])
+        if not allow_narrowing:
+            back = cast.astype(arr.dtype)
+            lossless = (np.array_equal(back, arr, equal_nan=True)
+                        if arr.dtype.kind == "f"
+                        else np.array_equal(back, arr))
+            if not lossless:
+                raise ValueError(
+                    f"column {name!r} ({arr.dtype}) does not fit "
+                    f"{np.dtype(_NARROW[arr.dtype.name]).name} and jax x64 "
+                    f"is disabled — enable jax_enable_x64, cast the data, "
+                    f"or pass allow_narrowing=True to accept the loss")
+        arr = cast
+    return jnp.asarray(arr)

@@ -38,3 +38,24 @@ def given(*_args, **_kwargs):
 
 def settings(*_args, **_kwargs):
     return lambda fn: fn
+
+
+# ---------------------------------------------------------------------------
+# pyarrow fallback (mirrors the hypothesis shim): pyarrow is the optional
+# [io] extra — Arrow/Parquet tests skip when it is missing (or disabled via
+# HPTMT_DISABLE_PYARROW=1, the "absent" CI leg), while the native .hpt
+# storage tests always run.  Tier-1 collection never hard-fails on it.
+# ---------------------------------------------------------------------------
+def _pyarrow_available() -> bool:
+    try:
+        from repro.io.compat import has_pyarrow
+    except ImportError:
+        return False
+    return has_pyarrow()
+
+
+HAS_PYARROW = _pyarrow_available()
+
+requires_pyarrow = pytest.mark.skipif(
+    not HAS_PYARROW,
+    reason="pyarrow not installed/disabled (optional [io] extra)")
