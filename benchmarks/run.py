@@ -4,6 +4,9 @@
   bench_table_ops     → paper Tables II/III (relational operators)
   bench_shuffle       → paper Fig 2     (shuffle primitive)
   bench_join_scaling  → paper Fig 16    (Cylon join scaling study)
+  bench_join_highdup  → high-duplication join: hash vs sort-merge
+                        (fan-out ≈ 8, DESIGN.md §8)
+  bench_setop_union   → set-op union on the hash dedup path
   bench_mds           → paper Figs 14/15 (MDS composition pipeline)
   bench_lm_step       → framework: LM train/decode step (tokens/s)
   bench_kernels       → Pallas kernel interpret-mode vs ref overhead
@@ -165,7 +168,8 @@ def bench_join_then_groupby(n: int = 200_000):
 
 def bench_join_scaling(sizes=(50_000, 100_000, 200_000, 400_000)):
     """Paper Fig 16: join wall time while load grows (weak scaling proxy:
-    rows double, per-row time should stay ~flat)."""
+    rows double, per-row time should stay ~flat).  Runs the default path
+    (``method="auto"`` → the sort-free hash build/probe, DESIGN.md §8)."""
     for n in sizes:
         rng = np.random.default_rng(0)
         lk = rng.permutation(n).astype(np.int32)
@@ -178,6 +182,48 @@ def bench_join_scaling(sizes=(50_000, 100_000, 200_000, 400_000)):
             a, b, ["k"], out_capacity=n, ctx=CTX))
         us = _timeit(jfn, l, r, iters=3)
         _emit(f"fig16_join_{n}", us, f"{n / (us * 1e-6) / 1e6:.2f}Mrow/s")
+
+
+def bench_join_highdup(n: int = 200_000, n_keys: int = 1_000,
+                       fanout: int = 8):
+    """High-duplication join (fan-out ≈ ``fanout``): sort-merge's worst
+    regime, and the case the hash engine's counted two-pass scheme is
+    built for (DESIGN.md §8).
+
+    Left: ``n`` rows with keys uniform over ``n_keys``; right: every key
+    exactly ``fanout`` times — each left row emits ``fanout`` pairs.  Both
+    kernels run on identical inputs; the sort path's probe window is set
+    to the duplicate depth it needs to find every match.
+    """
+    rng = np.random.default_rng(0)
+    lk = rng.integers(0, n_keys, n).astype(np.int32)
+    rk = np.repeat(np.arange(n_keys, dtype=np.int32), fanout)
+    l = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(lk), "a": jnp.asarray(lk, jnp.float32)}), CTX)
+    r = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(rk),
+         "b": jnp.arange(len(rk), dtype=jnp.float32)}), CTX)
+    out_cap = n * fanout
+    jhash = jax.jit(lambda a, b: table_ops.join(
+        a, b, ["k"], max_matches=fanout, out_capacity=out_cap, ctx=CTX))
+    jsort = jax.jit(lambda a, b: table_ops.join(
+        a, b, ["k"], max_matches=fanout, window=fanout,
+        out_capacity=out_cap, method="sort", ctx=CTX))
+    us = _timeit(jhash, l, r, iters=3)
+    _emit("join_highdup", us, f"{n / (us * 1e-6) / 1e6:.2f}Mrow/s")
+    us_sort = _timeit(jsort, l, r, iters=3)
+    _emit("join_highdup_sort", us_sort,
+          f"hash_{us_sort / us:.2f}x_faster")
+
+
+def bench_setop_union(n: int = 200_000):
+    """Set-op union at ``n`` rows per side: concat + sort-free hash dedup
+    over the carried full-row hashes (DESIGN.md §8)."""
+    dt = _table(n)
+    dt2 = _table(n, seed=1)
+    jfn = jax.jit(lambda a, b: table_ops.union(a, b, ctx=CTX))
+    us = _timeit(jfn, dt, dt2, iters=3)
+    _emit("setop_union_200k", us, f"{2 * n / (us * 1e-6) / 1e6:.1f}Mrow/s")
 
 
 def bench_mds():
@@ -376,6 +422,8 @@ def main(argv=None) -> None:
         bench_groupby_lowcard(n=20_000, n_keys=200)
         bench_join_then_groupby(n=20_000)
         bench_join_scaling(sizes=(20_000, 40_000))
+        bench_join_highdup(n=20_000, n_keys=200)
+        bench_setop_union(n=20_000)
         bench_scan_ingest(n=50_000)
     else:
         bench_array_ops()
@@ -384,6 +432,8 @@ def main(argv=None) -> None:
         bench_groupby_lowcard()
         bench_join_then_groupby()
         bench_join_scaling()
+        bench_join_highdup()
+        bench_setop_union()
         bench_mds()
         bench_lm_step()
         bench_kernels()

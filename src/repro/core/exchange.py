@@ -19,7 +19,10 @@ primitive, replacing the seed's per-column exchange with three optimisations
   3. **Hash carrying** — the row hashes ``(h1, h2)`` computed for destination
      assignment are threaded through the exchange as hidden columns
      (:data:`H1_NAME` / :data:`H2_NAME`), so join / set-op kernels never
-     rehash rows after a shuffle.
+     rehash rows after a shuffle — the carried pair directly seeds the
+     hash-join / set-op slot tables (``h1`` = probe start, ``h2|1`` =
+     stride; DESIGN.md §3.3/§8), with :func:`key_compare_u32` providing
+     the matching bitwise verification lanes.
 
 The static-shape overflow contract is unchanged from the seed: rows beyond a
 destination bucket (send side) or beyond ``out_capacity`` (receive side) are
@@ -243,6 +246,30 @@ def hash_shuffle(cols: Cols, count: jnp.ndarray, key_names: Sequence[str],
                                          hist=hist)
     out, new_count, ov_recv = compact_rows(bufs, valid, out_capacity)
     return out, new_count, ov_send + ov_recv
+
+
+def key_compare_u32(cols: Cols, key_names: Sequence[str]) -> jnp.ndarray:
+    """Bitwise key-comparison lanes, consistent with the hash identity.
+
+    Builds the ``(N, L)`` uint32 matrix the hash-join / set-op kernels
+    verify candidates against: float keys narrow to float32 and compare by
+    bit pattern — exactly the identity ``hash_columns`` uses, so NaN keys
+    with equal bits are equal and ``-0.0 != +0.0`` (DESIGN.md §8) — while
+    integer/bool keys compare by their packed two's-complement lanes
+    (identical to value equality).  The lane packing reuses the §3.1
+    exchange layout (:func:`_col_to_u32`), so 64-bit integer keys keep both
+    halves.  Comparing rows ``i`` and ``j`` is then
+    ``jnp.all(m[i] == m[j])`` — two uint32 lane compares per key column,
+    never a trip through the original dtypes.
+    """
+    parts = []
+    for name in key_names:
+        col = cols[name]
+        if jnp.issubdtype(col.dtype, jnp.floating):
+            col = jax.lax.bitcast_convert_type(
+                col.astype(jnp.float32), jnp.uint32)
+        parts.append(_col_to_u32(col))
+    return jnp.concatenate(parts, axis=1)
 
 
 def check_no_reserved(names: Sequence[str]) -> None:

@@ -39,7 +39,7 @@ from jax.sharding import PartitionSpec as P
 from .array_ops import spmd_allgather, spmd_allreduce
 from .context import HPTMTContext
 from .exchange import (check_no_reserved, compact_rows, exchange_rows,
-                       hash_shuffle, take_hashes)
+                       hash_shuffle, key_compare_u32, take_hashes)
 from .operator import Abstraction, Style, operator
 from .table import DistTable, Table, _pad_axis0
 
@@ -264,8 +264,54 @@ def orderby(dt: DistTable, key: str, *, ctx: HPTMTContext,
 
 
 # ===========================================================================
-# Join (Table III) — shuffle + local sort-merge
+# Join (Table III) — shuffle + local hash build/probe (or sort-merge oracle)
 # ===========================================================================
+_JOIN_HOWS = ("inner", "left", "right", "outer")
+
+
+def _hash_slots(n_rows: int) -> int:
+    """Power-of-two slot count with 4x head-room — the one sizing rule for
+    every build table (join, set ops, groupby hash; DESIGN.md §8.1)."""
+    return 1 << max(int(4 * n_rows - 1).bit_length(), 6)
+
+
+def _bcast(mask: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a row mask over ``v``'s trailing dims; zero masked rows."""
+    return jnp.where(mask.reshape((-1,) + (1,) * (v.ndim - 1)), v,
+                     jnp.zeros_like(v))
+
+
+def _emit_join_columns(lcols: Cols, rcols: Cols, keys, li, ri) -> Cols:
+    """Late-materialized join output from ``(left_row, right_row)`` pairs.
+
+    The probe/merge loops emit only the two int32 index lanes — ``li``
+    and ``ri`` in each side's original row space, ``-1`` for an absent
+    side — and every payload column is gathered here ONCE per side
+    (DESIGN.md §8).  Key columns come from whichever side the pair has
+    (left wins when both); absent sides zero-fill, so pure-padding pairs
+    are zero rows.
+    """
+    has_l, has_r = li >= 0, ri >= 0
+    li_s = jnp.where(has_l, li, 0)
+    ri_s = jnp.where(has_r, ri, 0)
+    out: Cols = {}
+    for k in keys:
+        out[k] = jnp.where(
+            has_l.reshape((-1,) + (1,) * (lcols[k].ndim - 1)),
+            lcols[k][li_s], _bcast(has_r, rcols[k][ri_s]))
+    for k, v in lcols.items():
+        if k in keys:
+            continue
+        out[k] = _bcast(has_l, v[li_s])
+    for k, v in rcols.items():
+        if k in keys:
+            continue
+        name = k if k not in lcols else f"{k}_r"
+        out[name] = _bcast(has_r, v[ri_s])
+    out["_matched"] = has_l & has_r
+    return out
+
+
 def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
                        max_matches, window, out_capacity):
     # hashes carried through the shuffle (or computed here on the
@@ -293,12 +339,27 @@ def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
     cnt = hi - lo
 
     def keys_equal(cand):
+        # bitwise identity, matching the hash (NaN keys with equal bits
+        # are equal, ±0.0 are not) — value ``==`` would contradict the
+        # hash adjacency this path probes by (same fix as groupby PR 2)
         eq = lh2 == rh2s[cand]
         for k in keys:
-            eq &= lcols[k] == rkey_s[k][cand]
+            eq &= _key_bits_eq(lcols[k], rkey_s[k][cand])
         return eq
 
     rows = jnp.arange(lcap, dtype=jnp.int32)
+    cnt_win = jnp.zeros((lcap,), jnp.int32)  # verified matches in window
+    # right rows some left row verified against, even past the fan-out cap
+    # (a capped pair must not resurface in the right/outer tail — same
+    # rule as the hash path); only those modes pay the scatter
+    track_touch = how in ("right", "outer")
+    rtouched = jnp.zeros((rcap,), bool)
+
+    def touch(rtouched, ok, cand):
+        if not track_touch:
+            return rtouched
+        return rtouched.at[jnp.where(ok, cand, rcap)].set(True, mode="drop")
+
     if max_matches == 1:
         # scatter-free fast path: first match wins
         ridx = jnp.full((lcap,), -1, jnp.int32)
@@ -306,6 +367,8 @@ def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
         for j in range(window):
             cand = jnp.clip(lo + j, 0, rcap - 1)
             ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
+            cnt_win += ok.astype(jnp.int32)
+            rtouched = touch(rtouched, ok, cand)
             ok &= ~found
             ridx = jnp.where(ok, cand, ridx)
             found |= ok
@@ -317,52 +380,126 @@ def _local_sorted_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
         for j in range(window):
             cand = jnp.clip(lo + j, 0, rcap - 1)
             ok = (j < cnt) & lmask & rvalid_s[cand] & keys_equal(cand)
+            cnt_win += ok.astype(jnp.int32)
+            rtouched = touch(rtouched, ok, cand)
             ok &= matched < max_matches
             slot = jnp.clip(matched, 0, max_matches - 1)
             cur = right_idx[rows, slot]
             right_idx = right_idx.at[rows, slot].set(jnp.where(ok, cand, cur))
             matched = matched + ok.astype(jnp.int32)
 
+    # fan-out overflow (§2): matches verified but dropped by max_matches,
+    # plus equal-h1 candidates beyond the probe window that could not even
+    # be verified — never silently lost
+    fanout_ov = jnp.sum(
+        jnp.maximum(cnt_win - max_matches, 0)
+        + jnp.where(lmask, jnp.maximum(cnt - window, 0), 0), dtype=jnp.int32)
+
     # expand to (lcap * max_matches) candidate output rows
     li = jnp.repeat(rows, max_matches)
     ri = right_idx.reshape(-1)
     has_match = ri >= 0
-    if how == "inner":
+    first = (jnp.arange(lcap * max_matches) % max_matches) == 0
+    keep_unmatched_l = first & lmask[li] & (matched[li] == 0)
+    if how in ("inner", "right"):
         keep = has_match
-    elif how == "left":
-        first = (jnp.arange(lcap * max_matches) % max_matches) == 0
-        keep = has_match | (first & lmask[li] & (matched[li] == 0))
-    else:
-        raise ValueError(f"unsupported join type {how!r}")
+    else:  # left / outer
+        keep = has_match | keep_unmatched_l
+    if how in ("right", "outer"):
+        # tail block: right rows (in h1-sorted space) no left row verified
+        tail_keep = rvalid_s & ~rtouched
+        li = jnp.concatenate([li, jnp.full((rcap,), -1, jnp.int32)])
+        ri = jnp.concatenate([ri, jnp.arange(rcap, dtype=jnp.int32)])
+        keep = jnp.concatenate([keep, tail_keep])
 
-    ri_safe = jnp.clip(ri, 0, rcap - 1)
-    rsrc = rorder[ri_safe]  # compose sort + probe gathers for output cols
-    out: Cols = {}
-    for k, v in lcols.items():
-        out[k] = v[li]
-    for k, v in rcols.items():
-        if k in keys:
-            continue
-        name = k if k not in lcols else f"{k}_r"
-        gathered = v[rsrc]
-        out[name] = jnp.where(
-            has_match.reshape((-1,) + (1,) * (gathered.ndim - 1)),
-            gathered, jnp.zeros_like(gathered))
-    out["_matched"] = has_match
-    return _compact_cols(out, keep, out_capacity)
+    # ri indexes h1-sorted right space: compose sort + probe gathers so
+    # every right column rides one gather through ``rorder``
+    rsrc = jnp.where(ri >= 0, rorder[jnp.where(ri >= 0, ri, 0)], -1)
+    out = _emit_join_columns(lcols, rcols, keys, li, rsrc)
+    cols, n_out, trunc = _compact_cols(out, keep, out_capacity)
+    return cols, n_out, trunc + fanout_ov
 
 
-def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
-               n_shards, lbucket, rbucket, mid_cap_l, mid_cap_r,
-               out_capacity, axis, shuffle_left, shuffle_right):
+def _local_hash_join(lcols: Cols, ln, rcols: Cols, rn, *, keys, how,
+                     max_matches, max_probes, out_capacity):
+    """Sort-free local join: hash build over the right side, counted
+    two-pass probe by the left, late-materialized payload gather.
+
+    The build table is seeded by the ``(h1, h2)`` carried through the
+    exchange (zero rehash); the probe hot loop touches only the two hash
+    lanes plus the bitwise key lanes, and emits bare ``(left_row,
+    right_row)`` index pairs at exclusive-scan offsets — output rows are
+    born compacted, so the path contains zero ``sort`` primitives
+    (DESIGN.md §8).  Overflow counts, per the §2 contract: verified
+    matches dropped by ``max_matches``, probe/build rows that exhausted
+    ``max_probes`` (their matches are unprovable), and rows past
+    ``out_capacity``.
+    """
+    from repro.kernels.hash_join import ops as hjops
+
+    lcols, lh1, lh2 = take_hashes(lcols, keys)
+    rcols, rh1, rh2 = take_hashes(rcols, keys)
+    lcap = next(iter(lcols.values())).shape[0]
+    rcap = next(iter(rcols.values())).shape[0]
+    lmask, rmask = _mask_for(ln, lcap), _mask_for(rn, rcap)
+    lkeys = key_compare_u32(lcols, keys)
+    rkeys = key_compare_u32(rcols, keys)
+
+    slots = _hash_slots(rcap)
+    table, n_unplaced = hjops.build_table(rh1, rh2, rmask, slots, max_probes)
+    slot_h2, slot_keys = hjops.slot_payload(table, rh2, rkeys)
+    cnt, rimat, exhausted = hjops.probe(table, slot_h2, slot_keys, lh1, lh2,
+                                        lkeys, lmask, max_matches,
+                                        max_probes)
+
+    keep_all_left = how in ("left", "outer")
+    emit_n = jnp.minimum(cnt, max_matches)
+    if keep_all_left:
+        emit_n = jnp.maximum(emit_n, 1)
+    emit_n = jnp.where(lmask, emit_n, 0)
+    base = jnp.cumsum(emit_n) - emit_n  # exclusive scan → packed offsets
+    total = jnp.sum(emit_n, dtype=jnp.int32)
+    li, ri = hjops.emit_lookup(rimat, base, emit_n, total, out_capacity)
+    overflow = (jnp.sum(jnp.where(lmask, jnp.maximum(cnt - max_matches, 0),
+                                  0), dtype=jnp.int32)
+                + jnp.sum(exhausted, dtype=jnp.int32) + n_unplaced)
+    if how in ("right", "outer"):
+        # tail: right rows no left row's key matches, found by the reverse
+        # membership probe (a unique-key table over the LEFT side) — a
+        # right row whose pairs were all dropped by the fan-out cap stays
+        # matched, so capped pairs never resurface as unmatched rows
+        lslots = _hash_slots(lcap)
+        lowner, _, l_unres = hjops.build_table_unique(
+            lh1, lh2, lkeys, lmask, lslots, max_probes)
+        lsh2, lskeys = hjops.slot_payload(lowner, lh2, lkeys)
+        rcnt, _, rexh = hjops.probe(lowner, lsh2, lskeys, rh1, rh2,
+                                    rkeys, rmask, 1, max_probes)
+        tail = rmask & (rcnt == 0) & ~rexh
+        tcum = jnp.cumsum(tail.astype(jnp.int32))
+        tpos = jnp.where(tail, total + tcum - 1, out_capacity)
+        ri = ri.at[tpos].set(jnp.arange(rcap, dtype=jnp.int32), mode="drop")
+        total = total + jnp.sum(tail, dtype=jnp.int32)
+        overflow = (overflow + jnp.sum(l_unres, dtype=jnp.int32)
+                    + jnp.sum(rexh, dtype=jnp.int32))
+
+    out = _emit_join_columns(lcols, rcols, keys, li, ri)
+    overflow = overflow + jnp.maximum(total - out_capacity, 0)
+    return out, jnp.minimum(total, out_capacity), overflow
+
+
+def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, method, max_matches,
+               window, max_probes, n_shards, lbucket, rbucket, mid_cap_l,
+               mid_cap_r, out_capacity, axis, shuffle_left, shuffle_right):
     lcols, ln = _local_parts(lc, lcnt)
     rcols, rn = _local_parts(rc, rcnt)
     ov = jnp.zeros((), jnp.int32)
     if n_shards > 1:
         # co-locate equal keys; carry (h1, h2) so the local join never
-        # rehashes the shuffled rows.  A side whose partitioning metadata
-        # already proves co-location skips its exchange (DESIGN.md §4);
-        # its hashes are recomputed locally by take_hashes.
+        # rehashes the shuffled rows — the hash path seeds its build table
+        # straight from the carried hashes (DESIGN.md §3.3/§8).  A side
+        # whose partitioning metadata already proves co-location skips its
+        # exchange (DESIGN.md §4); its hashes are recomputed locally by
+        # take_hashes.
         if shuffle_left:
             lcols, ln, o = hash_shuffle(lcols, ln, keys, n_shards, lbucket,
                                         mid_cap_l, axis, carry_hashes=True)
@@ -371,9 +508,16 @@ def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
             rcols, rn, o = hash_shuffle(rcols, rn, keys, n_shards, rbucket,
                                         mid_cap_r, axis, carry_hashes=True)
             ov = ov + o
-    out, cnt, ov_o = _local_sorted_join(
-        lcols, ln, rcols, rn, keys=keys, how=how, max_matches=max_matches,
-        window=window, out_capacity=out_capacity)
+    if method == "hash":
+        out, cnt, ov_o = _local_hash_join(
+            lcols, ln, rcols, rn, keys=keys, how=how,
+            max_matches=max_matches, max_probes=max_probes,
+            out_capacity=out_capacity)
+    else:
+        out, cnt, ov_o = _local_sorted_join(
+            lcols, ln, rcols, rn, keys=keys, how=how,
+            max_matches=max_matches, window=window,
+            out_capacity=out_capacity)
     overflow = ov + ov_o
     if axis is not None:
         overflow = spmd_allreduce(overflow, axis)
@@ -384,28 +528,56 @@ def _join_impl(lc, lcnt, rc, rcnt, *, keys, how, max_matches, window,
 def join(left: DistTable, right: DistTable, keys: Sequence[str], *,
          ctx: HPTMTContext, how: str = "inner", max_matches: int = 1,
          window: int = 4, out_capacity: Optional[int] = None,
-         bucket_factor: float = 2.0) -> Tuple[DistTable, jnp.ndarray]:
-    """Distributed equi-join: shuffle-by-key + local sort-merge (Table III).
+         bucket_factor: float = 2.0, method: str = "auto",
+         max_probes: Optional[int] = None
+         ) -> Tuple[DistTable, jnp.ndarray]:
+    """Distributed equi-join: shuffle-by-key + local hash build/probe
+    (Table III); ``how`` is inner/left/right/outer.
+
+    ``method`` selects the local kernel (DESIGN.md §8): ``"hash"`` — a
+    sort-free open-addressing build over the right side plus a counted
+    two-pass probe with late-materialized payload gathers; ``"sort"`` —
+    the sort-merge oracle (argsort by carried hash + bounded probe
+    window).  ``"auto"`` picks hash: it is sort-free, faster at every
+    measured size, and reports rather than misses fan-out beyond its
+    probe bound.  Put the smaller table on the right — it is the build
+    side (conventional for both kernels: sort-merge orders the right side
+    too, and swapping sides internally would silently change which side
+    ``max_matches`` caps).
 
     ``max_matches`` bounds the join fan-out per left row (static shapes);
-    rows beyond it are counted in the returned overflow.  A side already
-    hash-partitioned on exactly ``keys`` skips its shuffle; the output is
-    itself partitioned on ``keys`` (matched rows stay on the shard their
-    key hashed to), so a following groupby/join on the same keys moves no
-    data (DESIGN.md §4).
+    matches beyond it — and, on the hash path, rows whose probe chain
+    exceeds ``max_probes`` — are counted in the returned overflow, never
+    silently lost.  A side already hash-partitioned on exactly ``keys``
+    skips its shuffle; the output is itself partitioned on ``keys``
+    (matched rows stay on the shard their key hashed to), so a following
+    groupby/join on the same keys moves no data (DESIGN.md §4).
     """
+    if how not in _JOIN_HOWS:
+        raise ValueError(f"unknown join type how={how!r}; "
+                         f"expected one of {_JOIN_HOWS}")
+    if method not in ("auto", "hash", "sort"):
+        raise ValueError(f"unknown join method={method!r}; "
+                         f"expected 'auto', 'hash' or 'sort'")
+    if max_matches < 1:
+        raise ValueError(f"max_matches={max_matches} must be >= 1")
+    if method == "auto":
+        method = "hash"
     check_no_reserved(left.column_names)
     check_no_reserved(right.column_names)
     n = ctx.n_shards
     mid_l = max(left.capacity, 1)
     mid_r = max(right.capacity, 1)
+    default_out = mid_l * max_matches + (
+        mid_r if how in ("right", "outer") else 0)
     impl = functools.partial(
-        _join_impl, keys=tuple(keys), how=how, max_matches=max_matches,
-        window=window, n_shards=n,
+        _join_impl, keys=tuple(keys), how=how, method=method,
+        max_matches=max_matches, window=window,
+        max_probes=max_probes or max(64, 2 * max_matches), n_shards=n,
         lbucket=_bucket_capacity(left.capacity, n, bucket_factor),
         rbucket=_bucket_capacity(right.capacity, n, bucket_factor),
         mid_cap_l=mid_l, mid_cap_r=mid_r,
-        out_capacity=out_capacity or mid_l * max_matches,
+        out_capacity=out_capacity or default_out,
         shuffle_left=not _partitioned_on(left, keys, ctx),
         shuffle_right=not _partitioned_on(right, keys, ctx))
     cols, counts, overflow = _run_sharded(
@@ -591,55 +763,30 @@ def _local_groupby_hash(cols: Cols, count, *, keys, aggs, out_capacity,
                         max_probes: int = 64):
     """Sort-free grouping: claim hash-table slots, segment-reduce by slot.
 
-    Each valid row double-hash-probes a power-of-two slot table; the lowest
-    row index probing a free slot claims it for its key (scatter-min), and
-    rows match a slot only after comparing the ACTUAL key columns against
-    the claimant (hash equality is never trusted, DESIGN.md §4).  The probe
-    loop is a ``while_loop`` that exits as soon as every valid row is
-    resolved — typically 2-3 rounds at the ≤25% load factor implied by the
-    4x slot head-room.  Rows unresolved after ``max_probes`` (cardinality
-    far beyond ``out_capacity``) are counted as overflow, per the §2
+    Each valid row double-hash-probes a power-of-two slot table via the
+    shared ``build_table_unique`` primitive (``kernels/hash_join``, also
+    under the join and set-op paths — DESIGN.md §8): the lowest row index
+    probing a free slot claims it for its key (scatter-min), and rows
+    match a slot only after comparing their ACTUAL bitwise key lanes
+    against the claimant (hash equality is never trusted, DESIGN.md §4).
+    The probe loop exits as soon as every valid row is resolved —
+    typically 2-3 rounds at the ≤25% load factor implied by the 4x slot
+    head-room.  Rows unresolved after ``max_probes`` (cardinality far
+    beyond ``out_capacity``) are counted as overflow, per the §2
     contract.  O(n) per round, zero sorts.
     """
+    from repro.kernels.hash_join import ops as hjops
+
     from .table import hash_columns
 
     cap = next(iter(cols.values())).shape[0]
     mask = _mask_for(count, cap)
-    slots = 1 << max(int(4 * out_capacity - 1).bit_length(), 6)
+    slots = _hash_slots(out_capacity)
     h1, h2 = hash_columns([cols[k] for k in keys])
-    step = (h2 | jnp.uint32(1))  # odd => full cycle over pow2 table
-    rows = jnp.arange(cap, dtype=jnp.int32)
-    big = jnp.int32(2**31 - 1)
+    owner, seg, unresolved = hjops.build_table_unique(
+        h1, h2, key_compare_u32(cols, keys), mask, slots, max_probes)
 
-    def probe_slot(j):
-        return ((h1 + j.astype(jnp.uint32) * step)
-                & jnp.uint32(slots - 1)).astype(jnp.int32)
-
-    def cond(state):
-        j, _owner, _seg, unresolved = state
-        return (j < max_probes) & jnp.any(unresolved)
-
-    def body(state):
-        j, owner, seg, unresolved = state
-        slot = probe_slot(j)
-        idx = jnp.where(unresolved, slot, slots)
-        attempt = jnp.full((slots,), big, jnp.int32
-                           ).at[idx].min(rows, mode="drop")
-        owner = jnp.where(owner == big, attempt, owner)  # claimed slots stay
-        own = owner[slot]
-        same = own < big
-        safe = jnp.where(same, own, 0)
-        for k in keys:
-            same &= _key_bits_eq(cols[k], cols[k][safe])
-        resolved = unresolved & same
-        seg = jnp.where(resolved, slot, seg)
-        return j + 1, owner, seg, unresolved & ~same
-
-    state = (jnp.int32(0), jnp.full((slots,), big, jnp.int32),
-             jnp.full((cap,), slots, jnp.int32), mask)
-    _, owner, seg, unresolved = jax.lax.while_loop(cond, body, state)
-
-    occupied = owner < big
+    occupied = owner >= 0
     claimant = jnp.where(occupied, owner, 0)
     slot_cols: Cols = {k: jnp.where(
         occupied.reshape((-1,) + (1,) * (cols[k].ndim - 1)),
@@ -811,44 +958,52 @@ def aggregate(dt: DistTable, column: str, op: str, *, ctx: HPTMTContext):
 # ===========================================================================
 # set operators: Union / Difference / Intersect / Cartesian (Table II/III)
 # ===========================================================================
-def _dedup_sorted(cols: Cols, h1, h2, mask):
-    """Keep the first row of every (h1, h2, full-row) duplicate group."""
-    sorted_cols, order = _sort_cols(cols, [h1, h2], mask)
-    sh1, sh2, sm = h1[order], h2[order], mask[order]
-    same_hash = jnp.concatenate([
-        jnp.zeros((1,), bool), (sh1[1:] == sh1[:-1]) & (sh2[1:] == sh2[:-1])])
-    same_row = same_hash
-    for k, v in sorted_cols.items():
-        eq = jnp.concatenate([jnp.zeros((1,), bool), v[1:] == v[:-1]])
-        same_row = same_row & eq
-    keep = sm & ~same_row
-    return sorted_cols, keep
+def _dedup_hash(cols: Cols, h1, h2, mask, max_probes: int = 64):
+    """Keep the lowest-index row of every bitwise-equal duplicate group.
 
-
-def _membership(a_cols: Cols, amask, ah1, ah2, b_cols: Cols, bmask, bh1, bh2,
-                names, window=8):
-    """For each row of A: does an equal row exist in B? (hash + verify).
-
-    Row hashes are passed in — carried through the shuffle or computed once
-    by the caller — so membership itself never rehashes.
+    Sort-free: rows claim unique-key slots (``build_table_unique`` over
+    the carried full-row hashes) and only slot claimants survive.  Rows
+    whose probe chain exhausts are *kept* and counted — dropping them
+    could lose a distinct row, keeping one can at worst leave a duplicate
+    that the overflow count tells the caller to retry away (§2).
+    Returns ``(keep, n_unresolved)``; row identity is bitwise (equal-bit
+    NaNs deduplicate, ±0.0 stay distinct), consistent with the hashes.
     """
-    bh1 = jnp.where(bmask, bh1, jnp.uint32(0xFFFFFFFF))
-    # single-key stable sort (see _local_sorted_join): the bounded window
-    # probes equal-h1 groups, no secondary key needed
-    border = jnp.argsort(bh1, stable=True)
-    bh1s, bh2s, bvs = bh1[border], bh2[border], bmask[border]
-    bsorted = {k: b_cols[k][border] for k in names}
-    bcap = bh1s.shape[0]
-    lo = jnp.searchsorted(bh1s, ah1, side="left").astype(jnp.int32)
-    hi = jnp.searchsorted(bh1s, ah1, side="right").astype(jnp.int32)
-    found = jnp.zeros(ah1.shape, bool)
-    for j in range(window):
-        cand = jnp.clip(lo + j, 0, bcap - 1)
-        ok = (j < hi - lo) & bvs[cand] & (ah2 == bh2s[cand])
-        for k in names:
-            ok &= a_cols[k] == bsorted[k][cand]
-        found |= ok
-    return found & amask
+    from repro.kernels.hash_join import ops as hjops
+
+    cap = h1.shape[0]
+    keys_u32 = key_compare_u32(cols, tuple(sorted(cols)))
+    owner, seg, unresolved = hjops.build_table_unique(
+        h1, h2, keys_u32, mask, _hash_slots(cap), max_probes)
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    claimant = owner[jnp.where(unresolved, 0, seg)] == rows
+    keep = mask & (unresolved | claimant)
+    return keep, jnp.sum(unresolved, dtype=jnp.int32)
+
+
+def _membership_hash(a_cols: Cols, amask, ah1, ah2, b_cols: Cols, bmask,
+                     bh1, bh2, names, max_probes: int = 64):
+    """For each row of A: does a bitwise-equal row exist in B?
+
+    Hash + verify over a unique-key slot table of B — the same build/probe
+    primitives as the join, seeded by the carried hashes (zero rehash,
+    zero sorts).  Returns ``(found, n_overflow)`` where the count covers B
+    rows missing from the table and A probes that exhausted — for both,
+    membership is unprovable, so the caller surfaces the count (§2).
+    """
+    from repro.kernels.hash_join import ops as hjops
+
+    bkeys = key_compare_u32(b_cols, names)
+    akeys = key_compare_u32(a_cols, names)
+    owner, _, b_unres = hjops.build_table_unique(
+        bh1, bh2, bkeys, bmask, _hash_slots(bh1.shape[0]), max_probes)
+    slot_h2, slot_keys = hjops.slot_payload(owner, bh2, bkeys)
+    cnt, _, exhausted = hjops.probe(owner, slot_h2, slot_keys, ah1, ah2,
+                                    akeys, amask, 1, max_probes)
+    found = amask & (cnt > 0)
+    overflow = (jnp.sum(b_unres, dtype=jnp.int32)
+                + jnp.sum(exhausted, dtype=jnp.int32))
+    return found, overflow
 
 
 def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
@@ -869,7 +1024,8 @@ def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
             bcols, bn, o = hash_shuffle(bcols, bn, names, n_shards, bbucket,
                                         mid_b, axis, carry_hashes=True)
             ov += o
-    # hashes: popped from the shuffle carry, or computed once here
+    # hashes: popped from the shuffle carry, or computed once here — they
+    # seed the set-op slot tables directly (build-side reuse, DESIGN.md §8)
     acols, ah1, ah2 = take_hashes(acols, names)
     bcols, bh1, bh2 = take_hashes(bcols, names)
 
@@ -878,26 +1034,26 @@ def _setop_impl(ac, acnt, bc, bcnt, *, kind, names, n_shards, abucket,
     amask, bmask = _mask_for(an, acap), _mask_for(bn, bcap)
 
     if kind == "union":
-        # concat then dedup (hashes concatenate alongside the rows)
+        # concat then hash-dedup (hashes concatenate alongside the rows)
         cat = {k: jnp.concatenate([acols[k], bcols[k]]) for k in acols}
         cmask = jnp.concatenate([amask, bmask])
         h1 = jnp.concatenate([ah1, bh1])
         h2 = jnp.concatenate([ah2, bh2])
-        sorted_cols, keep = _dedup_sorted(cat, h1, h2, cmask)
-        out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
+        keep, o_dedup = _dedup_hash(cat, h1, h2, cmask)
+        out, cnt, o = _compact_cols(cat, keep, out_capacity)
     elif kind == "difference":
-        found = _membership(acols, amask, ah1, ah2, bcols, bmask, bh1, bh2,
-                            names)
+        found, o_dedup = _membership_hash(acols, amask, ah1, ah2, bcols,
+                                          bmask, bh1, bh2, names)
         out, cnt, o = _compact_cols(acols, amask & ~found, out_capacity)
     elif kind == "intersect":
-        found = _membership(acols, amask, ah1, ah2, bcols, bmask, bh1, bh2,
-                            names)
-        kept = amask & found
-        sorted_cols, keep = _dedup_sorted(acols, ah1, ah2, kept)
-        out, cnt, o = _compact_cols(sorted_cols, keep, out_capacity)
+        found, o_mem = _membership_hash(acols, amask, ah1, ah2, bcols,
+                                        bmask, bh1, bh2, names)
+        keep, o_d = _dedup_hash(acols, ah1, ah2, found)
+        o_dedup = o_mem + o_d
+        out, cnt, o = _compact_cols(acols, keep, out_capacity)
     else:
         raise ValueError(kind)
-    ov = ov + o
+    ov = ov + o + o_dedup
     if axis is not None:
         ov = spmd_allreduce(ov, axis)
     return out, cnt[None], ov

@@ -160,9 +160,20 @@ class DataFrame:
                          self._ctx)
 
     def join(self, other: "DataFrame", on: Sequence[str], how: str = "inner",
+             *, method: str = "auto", max_matches: int = 1,
              **kw) -> "DataFrame":
+        """Equi-join on ``on``; ``how`` is inner/left/right/outer.
+
+        ``method`` picks the local join kernel — ``"hash"`` (sort-free
+        build/probe, the ``"auto"`` choice), or ``"sort"`` (sort-merge
+        oracle) — and ``max_matches`` bounds the fan-out per left row;
+        matches beyond it count as overflow and raise here (DESIGN.md §8).
+        Unknown values are rejected eagerly, before any tracing, by
+        ``table_ops.join`` with a ValueError naming the offending kwarg.
+        """
         out, ov = table_ops.join(self._t, other._t, on, ctx=self._ctx,
-                                 how=how, **kw)
+                                 how=how, method=method,
+                                 max_matches=max_matches, **kw)
         self._check(ov, "join")
         return DataFrame(out, self._ctx)
 

@@ -1,0 +1,115 @@
+"""Pallas TPU probe kernel for the hash-join engine (DESIGN.md §8).
+
+The fused probe (the one walk of the counted two-pass scheme) is the
+join's hot loop: per probe row it walks the double-hash sequence,
+gathering only the slot-indexed ``table_row`` / ``h2`` / key lanes —
+two-ish uint32 lanes per candidate instead of the packed payload row —
+while counting matches and filling the first-``max_matches`` registers.
+The kernel blocks the probe rows across the grid and keeps the slot table
+resident (block index 0 on every grid step), so one HBM read of the probe
+block serves the whole walk; the walk itself is an early-exit
+``while_loop`` over VMEM gathers.
+
+Sizing caveat: the whole slot table (``table_row`` + ``h2`` + key lanes,
+4 bytes per lane per slot) must fit VMEM alongside one probe block —
+about 1M slots at one key lane on a ~16 MiB v5e core.  ``ops.py`` only
+dispatches here within that budget; larger tables take the jnp reference,
+which is the same algorithm as XLA gathers.
+
+The walk must match ``ref.probe`` bit-for-bit — the jnp oracle IS the
+semantics (tests compare in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(trow_ref, th2_ref, tkeys_ref, ph1_ref, ph2_ref, pkeys_ref,
+            pvalid_ref, cnt_ref, rimat_ref, exh_ref, *, slots: int,
+            max_probes: int, max_matches: int, n_lanes: int):
+    trow = trow_ref[...]
+    th2 = th2_ref[...]
+    tkeys = tkeys_ref[...]
+    ph1 = ph1_ref[...]
+    ph2 = ph2_ref[...]
+    pkeys = pkeys_ref[...]
+    active0 = pvalid_ref[...] != 0
+    step = ph2 | jnp.uint32(1)
+    block_n = ph1.shape[0]
+    ords = jnp.arange(max_matches, dtype=jnp.int32)
+
+    def cond(state):
+        j, _cnt, _rimat, active = state
+        return (j < max_probes) & jnp.any(active)
+
+    def body(state):
+        j, cnt, rimat, active = state
+        slot = ((ph1 + j.astype(jnp.uint32) * step)
+                & jnp.uint32(slots - 1)).astype(jnp.int32)
+        brow = jnp.take(trow, slot, axis=0)
+        occ = brow >= 0
+        match = active & occ & (ph2 == jnp.take(th2, slot, axis=0))
+        for lane in range(n_lanes):
+            match &= pkeys[:, lane] == jnp.take(tkeys[:, lane], slot, axis=0)
+        rimat = jnp.where(match[:, None] & (cnt[:, None] == ords[None, :]),
+                          brow[:, None], rimat)
+        return j + 1, cnt + match.astype(jnp.int32), rimat, active & occ
+
+    state = (jnp.int32(0), jnp.zeros((block_n,), jnp.int32),
+             jnp.full((block_n, max_matches), -1, jnp.int32), active0)
+    _, cnt, rimat, active = jax.lax.while_loop(cond, body, state)
+    cnt_ref[...] = cnt
+    rimat_ref[...] = rimat
+    exh_ref[...] = active.astype(jnp.int32)
+
+
+def probe_pallas(table_row: jnp.ndarray, slot_h2: jnp.ndarray,
+                 slot_keys: jnp.ndarray, ph1: jnp.ndarray,
+                 ph2: jnp.ndarray, pkeys_u32: jnp.ndarray,
+                 pvalid: jnp.ndarray, max_matches: int = 1,
+                 max_probes: int = 64, *, block_n: int = 1024,
+                 interpret: bool = False):
+    """table_row (S,) i32, slot_h2 (S,) u32, slot_keys (S, L) u32,
+    ph1/ph2 (N,) u32, pkeys_u32 (N, L) u32, pvalid (N,) bool →
+    ``(cnt (N,) int32, rimat (N, max_matches) int32, exhausted (N,)
+    bool)``."""
+    n = ph1.shape[0]
+    slots = table_row.shape[0]
+    n_lanes = slot_keys.shape[1]
+    n_pad = -(-n // block_n) * block_n
+    s_pad = max(128, slots)  # lane-width floor; padded slots are never probed
+    trow = jnp.pad(table_row, (0, s_pad - slots), constant_values=-1)
+    th2 = jnp.pad(slot_h2, (0, s_pad - slots))
+    tkeys = jnp.pad(slot_keys, ((0, s_pad - slots), (0, 0)))
+    h1 = jnp.pad(ph1, (0, n_pad - n))
+    h2 = jnp.pad(ph2, (0, n_pad - n))
+    pk = jnp.pad(pkeys_u32, ((0, n_pad - n), (0, 0)))
+    val = jnp.pad(pvalid.astype(jnp.int32), (0, n_pad - n))
+
+    row_spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    cnt, rimat, exh = pl.pallas_call(
+        functools.partial(_kernel, slots=slots, max_probes=max_probes,
+                          max_matches=max_matches, n_lanes=n_lanes),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((s_pad,), lambda i: (0,)),
+            pl.BlockSpec((s_pad,), lambda i: (0,)),
+            pl.BlockSpec((s_pad, n_lanes), lambda i: (0, 0)),
+            row_spec,
+            row_spec,
+            pl.BlockSpec((block_n, n_lanes), lambda i: (i, 0)),
+            row_spec,
+        ],
+        out_specs=[row_spec,
+                   pl.BlockSpec((block_n, max_matches), lambda i: (i, 0)),
+                   row_spec],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad, max_matches), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)],
+        interpret=interpret,
+    )(trow, th2, tkeys, h1, h2, pk, val)
+    return cnt[:n], rimat[:n], exh[:n].astype(bool)

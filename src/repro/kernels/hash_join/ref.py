@@ -1,0 +1,314 @@
+"""Pure-jnp oracle for the sort-free hash-join engine (DESIGN.md §8).
+
+Build/probe over a double-hash open-addressing slot table, seeded by the
+``(h1, h2)`` row hashes the exchange already carries (§3.3) — zero rehash.
+The probe sequence of a row is ``slot_j = (h1 + j * (h2 | 1)) & (slots-1)``
+(odd step over a power-of-two table → full cycle), identical for
+bitwise-equal keys since their hashes are equal.
+
+Two build flavours share that sequence:
+
+  * :func:`build_table` — the JOIN table: every valid build row claims its
+    OWN slot, so duplicate keys occupy successive reachable slots of the
+    shared sequence.  The open-addressing invariant (a row placed at probe
+    index ``j`` saw positions ``0..j-1`` occupied, and slots are never
+    vacated) means a probe walk that stops at the first EMPTY slot has
+    visited every equal-key build row.
+  * :func:`build_table_unique` — the GROUPBY/SET-OP table: bitwise-equal
+    keys SHARE one slot, claimed by the lowest row index (scatter-min),
+    and every row learns its slot.  Dedup keeps claimants; membership
+    probes for the representative.
+
+:func:`probe` / :func:`emit_lookup` are the counted two-pass scheme with
+a single fused walk: the probe pass counts matches per probe row AND
+records the first ``max_matches`` build rows in registers, the caller
+exclusive-scans the emit widths into packed output offsets, and the emit
+lookup maps every packed output slot back to its ``(probe row, match
+ordinal)`` by binary search over the scan and one register gather — the
+output is born compacted (no post-hoc compaction, no sort).  Matching
+never trusts hash equality: candidates compare their actual key lanes
+(``core.exchange.key_compare_u32`` — the same bitwise identity the hash
+uses).  All loops are early-exit ``while_loop``s; rows that exhaust
+``max_probes`` are surfaced to the caller, which counts them under the §2
+overflow contract.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BIG = 2**31 - 1  # empty-slot sentinel during construction (scatter-min)
+
+
+def _probe_slots(h1: jnp.ndarray, step: jnp.ndarray, j: jnp.ndarray,
+                 slots: int) -> jnp.ndarray:
+    """j-th probe slot of each row; ``j`` is scalar or per-row int32."""
+    return ((h1 + j.astype(jnp.uint32) * step)
+            & jnp.uint32(slots - 1)).astype(jnp.int32)
+
+
+def _take_first(eligible: jnp.ndarray, m: int) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Row indices of the first ``m`` eligible rows (scatter-free).
+
+    XLA CPU scatters cost per UPDATE (tens of ns each), gathers are
+    vectorized — so the retry rounds below never scatter full-width
+    arrays.  This selection is a cumsum plus a binary search over it
+    (searchsorted: gathers only); returns ``(indices (m,) int32 clipped
+    in-range, ok (m,) bool)``.
+    """
+    n = eligible.shape[0]
+    cs = jnp.cumsum(eligible.astype(jnp.int32))
+    k = jnp.arange(1, m + 1, dtype=jnp.int32)
+    ok = k <= cs[n - 1]
+    pos = jnp.searchsorted(cs, k, side="left").astype(jnp.int32)
+    return jnp.clip(pos, 0, n - 1), ok
+
+
+def build_table(h1: jnp.ndarray, h2: jnp.ndarray, valid: jnp.ndarray,
+                slots: int, max_probes: int = 64
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert every valid row into its own slot (the join build table).
+
+    Round 0 scatter-mins every valid row at its first probe slot — the
+    one unavoidable full-width scatter.  The (few) rows that lost a
+    contended slot then retry in compacted batches of ``~n/8``: each
+    retry round selects the lowest-index still-unplaced rows
+    (:func:`_take_first`), attempts their next FREE slot, and advances the
+    losers — so retry scatters are an order of magnitude narrower than
+    the table.  A row only moves past a slot it saw occupied, which is
+    what makes the first-empty-slot probe termination sound.  Rows still
+    unplaced after ``max_probes`` probes (or when the retry budget is
+    exhausted — adversarial duplicate floods) are missing from the table;
+    the caller must count them as overflow.
+
+    Returns ``(table_row (slots,) int32 with -1 = empty, n_unplaced)``.
+    """
+    n = h1.shape[0]
+    step = h2 | jnp.uint32(1)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.int32(_BIG)
+    m = min(n, max(256, n // 8))
+    outer_cap = n // m + 2  # each batch retires all its rows
+
+    table = jnp.full((slots,), big, jnp.int32)
+    slot0 = _probe_slots(h1, step, jnp.int32(0), slots)
+    table = table.at[jnp.where(valid, slot0, slots)].min(rows, mode="drop")
+    pending = valid & (table[slot0] != rows)
+
+    def outer_cond(state):
+        it, _table, pending, _failed = state
+        return (it < outer_cap) & jnp.any(pending)
+
+    def outer_body(state):
+        it, table, pending, failed = state
+        si, ok = _take_first(pending, m)
+        sh1, sstep = h1[si], step[si]
+
+        def inner_cond(s):
+            _jm, _table, alive, _placed = s
+            return jnp.any(alive)
+
+        def inner_body(s):
+            jm, table, alive, placed = s
+            slot = _probe_slots(sh1, sstep, jm, slots)
+            att = alive & (table[slot] == big)
+            table = table.at[jnp.where(att, slot, slots)].min(
+                si, mode="drop")
+            won = att & (table[slot] == si)
+            placed |= won
+            jm = jm + (alive & ~won).astype(jnp.int32)
+            return jm, table, alive & ~won & (jm < max_probes), placed
+
+        inner = (jnp.ones((m,), jnp.int32), table, ok,
+                 jnp.zeros((m,), bool))
+        _, table, _, placed = jax.lax.while_loop(inner_cond, inner_body,
+                                                 inner)
+        failed = failed + jnp.sum(ok & ~placed, dtype=jnp.int32)
+        pending = pending.at[jnp.where(ok, si, n)].set(False, mode="drop")
+        return it + 1, table, pending, failed
+
+    state = (jnp.int32(0), table, pending, jnp.int32(0))
+    _, table, pending, failed = jax.lax.while_loop(outer_cond, outer_body,
+                                                   state)
+    # rows still pending here only if the outer budget ran out
+    failed = failed + jnp.sum(pending, dtype=jnp.int32)
+    return jnp.where(table == big, -1, table), failed
+
+
+def build_table_unique(h1: jnp.ndarray, h2: jnp.ndarray,
+                       keys_u32: jnp.ndarray, valid: jnp.ndarray,
+                       slots: int, max_probes: int = 64
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One slot per distinct key, claimed by the lowest row index.
+
+    Round 0 scatter-mins every valid row at its first probe slot, then
+    resolves in bulk: a row joins a slot only after comparing its ACTUAL
+    key lanes against the claimant — hash equality is never trusted.
+    Bitwise-equal keys share the probe sequence, so the overwhelming
+    majority resolve against their representative immediately; the
+    leftovers (slot collisions between distinct keys) retry in compacted
+    ``~n/8`` batches exactly like :func:`build_table`, keeping every
+    retry scatter narrow.  Rows unresolved after ``max_probes`` probes or
+    the retry budget (key cardinality far beyond the slot head-room) are
+    the caller's overflow count.
+
+    Returns ``(owner (slots,) int32 claimant row or -1 = empty,
+    seg (n,) int32 slot of each resolved row with ``slots`` as the
+    unresolved sentinel, unresolved (n,) bool)``.
+    """
+    n = h1.shape[0]
+    step = h2 | jnp.uint32(1)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.int32(_BIG)
+    m = min(n, max(256, n // 8))
+    outer_cap = n // m + 2  # each batch retires all its rows
+
+    owner = jnp.full((slots,), big, jnp.int32)
+    slot0 = _probe_slots(h1, step, jnp.int32(0), slots)
+    owner = owner.at[jnp.where(valid, slot0, slots)].min(rows, mode="drop")
+    own0 = owner[slot0]
+    same0 = valid & (own0 < big)
+    safe0 = jnp.where(same0, own0, 0)
+    same0 &= jnp.all(keys_u32 == keys_u32[safe0], axis=1)
+    seg = jnp.where(same0, slot0, slots)
+    pending = valid & ~same0
+    unresolved = pending
+
+    def outer_cond(state):
+        it, _owner, _seg, pending, _unresolved = state
+        return (it < outer_cap) & jnp.any(pending)
+
+    def outer_body(state):
+        it, owner, seg, pending, unresolved = state
+        si, ok = _take_first(pending, m)
+        sh1, sstep, skeys = h1[si], step[si], keys_u32[si]
+
+        def inner_cond(s):
+            _jm, _owner, alive, _segm, _res = s
+            return jnp.any(alive)
+
+        def inner_body(s):
+            jm, owner, alive, segm, resolved = s
+            slot = _probe_slots(sh1, sstep, jm, slots)
+            free = owner[slot] == big
+            owner = owner.at[jnp.where(alive & free, slot, slots)].min(
+                si, mode="drop")
+            own = owner[slot]
+            same = alive & (own < big)
+            safe = jnp.where(same, own, 0)
+            same &= jnp.all(skeys == keys_u32[safe], axis=1)
+            segm = jnp.where(same, slot, segm)
+            resolved |= same
+            jm = jm + (alive & ~same).astype(jnp.int32)
+            return jm, owner, alive & ~same & (jm < max_probes), segm, \
+                resolved
+
+        inner = (jnp.ones((m,), jnp.int32), owner, ok,
+                 jnp.full((m,), slots, jnp.int32), jnp.zeros((m,), bool))
+        _, owner, _, segm, resolved = jax.lax.while_loop(
+            inner_cond, inner_body, inner)
+        seg = seg.at[jnp.where(ok & resolved, si, n)].set(segm, mode="drop")
+        unresolved = unresolved.at[jnp.where(ok & resolved, si, n)].set(
+            False, mode="drop")
+        pending = pending.at[jnp.where(ok, si, n)].set(False, mode="drop")
+        return it + 1, owner, seg, pending, unresolved
+
+    state = (jnp.int32(0), owner, seg, pending, unresolved)
+    _, owner, seg, _, unresolved = jax.lax.while_loop(outer_cond, outer_body,
+                                                      state)
+    return jnp.where(owner == big, -1, owner), seg, unresolved
+
+
+def slot_payload(table_row: jnp.ndarray, bh2: jnp.ndarray,
+                 bkeys_u32: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Slot-indexed verification payload: ``(h2, key lanes)`` per slot.
+
+    One batched gather per array at table-construction time, so the probe
+    loops touch only slot-indexed lanes (never the build table's packed
+    payload columns — those are late-materialized by the caller).
+    """
+    occ = table_row >= 0
+    safe = jnp.where(occ, table_row, 0)
+    slot_h2 = jnp.where(occ, bh2[safe], 0)
+    slot_keys = jnp.where(occ[:, None], bkeys_u32[safe],
+                          jnp.zeros_like(bkeys_u32[safe]))
+    return slot_h2, slot_keys
+
+
+def probe(table_row: jnp.ndarray, slot_h2: jnp.ndarray,
+          slot_keys: jnp.ndarray, ph1: jnp.ndarray, ph2: jnp.ndarray,
+          pkeys_u32: jnp.ndarray, pvalid: jnp.ndarray,
+          max_matches: int = 1, max_probes: int = 64
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The fused probe pass: match counts + the first-match registers.
+
+    Each probe row walks its sequence once, until the first empty slot
+    (which, by the build invariant, proves no further equal-key build
+    rows exist); candidates verify by ``h2`` plus the actual key lanes.
+    The walk simultaneously counts every match and records the first
+    ``max_matches`` build rows in an ``(n, max_matches)`` register matrix
+    — matches order by build-row index, since insertion order is row
+    order.  One walk serves both halves of the counted two-pass scheme;
+    :func:`emit_lookup` turns the registers into packed output pairs.
+
+    Returns ``(cnt (n,) int32, rimat (n, max_matches) int32 with -1 =
+    empty register, exhausted (n,) bool)`` — exhausted rows hit
+    ``max_probes`` while still on an occupied chain, so their count is a
+    lower bound and the caller surfaces them as overflow.
+    """
+    slots = table_row.shape[0]
+    n = ph1.shape[0]
+    step = ph2 | jnp.uint32(1)
+    ords = jnp.arange(max_matches, dtype=jnp.int32)
+
+    def cond(state):
+        j, _cnt, _rimat, active = state
+        return (j < max_probes) & jnp.any(active)
+
+    def body(state):
+        j, cnt, rimat, active = state
+        slot = _probe_slots(ph1, step, j, slots)
+        brow = table_row[slot]
+        occ = brow >= 0
+        match = active & occ & (ph2 == slot_h2[slot])
+        match &= jnp.all(pkeys_u32 == slot_keys[slot], axis=1)
+        rimat = jnp.where(match[:, None] & (cnt[:, None] == ords[None, :]),
+                          brow[:, None], rimat)
+        return j + 1, cnt + match.astype(jnp.int32), rimat, active & occ
+
+    state = (jnp.int32(0), jnp.zeros((n,), jnp.int32),
+             jnp.full((n, max_matches), -1, jnp.int32), pvalid)
+    _, cnt, rimat, active = jax.lax.while_loop(cond, body, state)
+    return cnt, rimat, active
+
+
+def emit_lookup(rimat: jnp.ndarray, base: jnp.ndarray, emit_n: jnp.ndarray,
+                total: jnp.ndarray, out_capacity: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Turn probe registers into packed ``(probe_row, build_row)`` pairs.
+
+    Output slot ``p`` belongs to probe row ``i`` with ``base[i] <= p <
+    base[i] + emit_n[i]`` (``base``/``emit_n`` are the exclusive scan and
+    widths of the per-row emit counts), recovered by a binary search over
+    the scan — searchsorted, not a sort — and its pair is one register
+    gather: the output is born compacted, scatter-free.  An output slot
+    owed to an unmatched keep-all row (``emit_n = 1`` with zero matches)
+    reads an empty register and keeps ``ri = -1`` — exactly the
+    left/outer unmatched row.
+
+    Returns ``(li, ri)`` int32 index pairs, ``-1`` for an absent side;
+    slots at or past ``total`` are ``(-1, -1)`` padding.
+    """
+    n, max_matches = rimat.shape
+    p = jnp.arange(out_capacity, dtype=jnp.int32)
+    ends = (base + emit_n).astype(jnp.int32)
+    i = jnp.clip(jnp.searchsorted(ends, p, side="right").astype(jnp.int32),
+                 0, n - 1)
+    valid_p = p < total
+    k_target = jnp.clip(p - base[i], 0, max_matches - 1)
+    ri = jnp.where(valid_p, rimat[i, k_target], -1)
+    return jnp.where(valid_p, i, -1), ri
