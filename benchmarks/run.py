@@ -6,6 +6,10 @@
   bench_join_scaling  → paper Fig 16    (Cylon join scaling study)
   bench_join_highdup  → high-duplication join: hash vs sort-merge
                         (fan-out ≈ 8, DESIGN.md §8)
+  bench_orderby       → multi-key sample sort (DESIGN.md §9)
+  bench_window_rolling→ rolling windows off the range layout vs a
+                        gather-then-numpy-sort oracle (DESIGN.md §9)
+  bench_topk          → tree-reduced top-k, no global sort
   bench_setop_union   → set-op union on the hash dedup path
   bench_mds           → paper Figs 14/15 (MDS composition pipeline)
   bench_lm_step       → framework: LM train/decode step (tokens/s)
@@ -216,6 +220,73 @@ def bench_join_highdup(n: int = 200_000, n_keys: int = 1_000,
           f"hash_{us_sort / us:.2f}x_faster")
 
 
+def bench_orderby(n: int = 500_000):
+    """Multi-key sample sort (DESIGN.md §9): monotone-lane directional
+    keys, splitter AllGather, one packed AllToAll, local lexsort."""
+    rng = np.random.default_rng(0)
+    dt = DistTable.from_local(Table.from_arrays({
+        "g": jnp.asarray(rng.integers(0, 1_000, n).astype(np.int32)),
+        "t": jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32)),
+        "v": jnp.asarray(rng.normal(size=n).astype(np.float32))}), CTX)
+    jfn = jax.jit(lambda t: table_ops.orderby(t, ["g", "t"], ctx=CTX))
+    us = _timeit(jfn, dt, iters=3)
+    _emit("orderby_500k", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+
+def bench_window_rolling(n: int = 200_000, n_part: int = 1_000,
+                         w: int = 32):
+    """Rolling windows off the range layout (DESIGN.md §9) vs the
+    numpy-style recompute an un-layouted system pays.
+
+    The subsystem path: the table already carries orderby's range
+    metadata (the steady state of an ordered pipeline), so `window`
+    evaluates sum+mean+count via the fused blocked scan with zero
+    exchanges and zero sorts.  The oracle: gather to host (`to_numpy`),
+    np.lexsort by (partition, order), vectorized cumsum-diff rolling —
+    the honest fast-numpy recompute.  Acceptance: ≥ 1.5x."""
+    rng = np.random.default_rng(0)
+    g = rng.integers(0, n_part, n).astype(np.int32)
+    t = rng.integers(0, 1 << 20, n).astype(np.int32)
+    v = rng.normal(size=n).astype(np.float32)
+    dt = DistTable.from_local(Table.from_arrays(
+        {"g": jnp.asarray(g), "t": jnp.asarray(t),
+         "v": jnp.asarray(v)}), CTX)
+    srt, _ = table_ops.orderby(dt, ["g", "t"], ctx=CTX)
+    aggs = [("v", "sum"), ("v", "mean"), (None, "count")]
+    jfn = jax.jit(lambda d: table_ops.window_aggregate(
+        d, ["g"], ["t"], aggs, rows=w, ctx=CTX))
+    us = _timeit(jfn, srt, iters=3)
+    _emit("window_rolling_200k", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+    def oracle():
+        cols = srt.to_numpy()  # the gather an un-layouted system pays
+        og, ot, ov = cols["g"], cols["t"], cols["v"]
+        order = np.lexsort((ot, og))
+        sg, sv = og[order], ov[order]
+        m = len(sv)
+        new_seg = np.r_[True, sg[1:] != sg[:-1]]
+        seg_start = np.maximum.accumulate(
+            np.where(new_seg, np.arange(m), 0))
+        c = np.cumsum(sv)
+        a = np.maximum(np.arange(m) - w + 1, seg_start)
+        s = c - np.where(a > 0, c[a - 1], 0.0)
+        cnt = np.arange(m) - a + 1
+        return s, s / cnt, cnt
+
+    us_o = _timeit(oracle, iters=3)
+    _emit("window_rolling_200k_oracle", us_o,
+          f"window_{us_o / us:.2f}x_faster")
+
+
+def bench_topk(n: int = 500_000, k: int = 64):
+    """Top-k via per-shard candidates + tree-reduce merge — no global
+    sort of the 500k rows ever happens off a single shard's lexsort."""
+    dt = _table(n)
+    jfn = jax.jit(lambda t: table_ops.topk(t, "v", k, ctx=CTX))
+    us = _timeit(jfn, dt, iters=3)
+    _emit("topk_500k", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+
+
 def bench_setop_union(n: int = 200_000):
     """Set-op union at ``n`` rows per side: concat + sort-free hash dedup
     over the carried full-row hashes (DESIGN.md §8)."""
@@ -423,6 +494,9 @@ def main(argv=None) -> None:
         bench_join_then_groupby(n=20_000)
         bench_join_scaling(sizes=(20_000, 40_000))
         bench_join_highdup(n=20_000, n_keys=200)
+        bench_orderby(n=50_000)
+        bench_window_rolling(n=20_000, n_part=200)
+        bench_topk(n=50_000)
         bench_setop_union(n=20_000)
         bench_scan_ingest(n=50_000)
     else:
@@ -433,6 +507,9 @@ def main(argv=None) -> None:
         bench_join_then_groupby()
         bench_join_scaling()
         bench_join_highdup()
+        bench_orderby()
+        bench_window_rolling()
+        bench_topk()
         bench_setop_union()
         bench_mds()
         bench_lm_step()

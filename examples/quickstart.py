@@ -99,6 +99,31 @@ def main():
         print(f"segments: {len(per_user)}, "
               f"count-weighted mean value: {weighted:.4f}")
         assert np.isfinite(weighted)
+
+    # --- 5. ordered analytics: orderby → rolling window (DESIGN.md §9) ----
+    # One sample sort establishes the range layout; the window functions
+    # then run with zero further exchanges and zero sorts — the ordered
+    # twin of the join→groupby elision above.
+    m = 5000
+    ticks = DataFrame.from_dict({
+        "symbol": rng.integers(0, 8, m).astype(np.int32),
+        "ts": rng.permutation(m).astype(np.int32),
+        "price": (100 + np.cumsum(rng.normal(0, 0.5, m))).astype(np.float32),
+    }, ctx)
+    ordered = ticks.sort_values(["symbol", "ts"])     # ONE exchange
+    assert ordered.partitioning_kind == "range"
+    feats = ordered.window(["symbol"], ["ts"]).agg(
+        [("price", "mean"), ("price", "min"), ("price", "max"),
+         ("price", "lag"), (None, "row_number")], rows=20)  # ZERO more
+    spread = feats.to_jax(["price_max", "price_min"])
+    print(f"rolling 20-tick max spread: "
+          f"{float(jnp.max(spread[:, 0] - spread[:, 1])):.3f}")
+    p75 = ordered.quantile("price", 0.75, method="exact")
+    movers = feats.select(lambda c: c["price_mean"] > p75)
+    print(f"p75 price {p75:.2f}; ticks with rolling mean above: "
+          f"{len(movers)}")
+    top = ticks.topk("price", 5)
+    print(f"top-5 prices: {np.asarray(top.to_numpy()['price']).round(2)}")
     print("quickstart OK")
 
 

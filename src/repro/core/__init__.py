@@ -2,5 +2,6 @@
 from . import array_ops, dataflow, table_ops
 from .context import HPTMTContext, host_test_context, local_context, make_mesh
 from .operator import Abstraction, Execution, Style, get_operator, list_operators
-from .table import DistTable, Table, hash_columns
+from .table import (DistTable, Table, hash_columns, partitioning_keys,
+                    partitioning_kind, range_partitioning)
 from .dataflow import TSet

@@ -23,7 +23,7 @@ import numpy as np
 from . import table_ops
 from .context import HPTMTContext
 from .operator import Abstraction, Execution, Style, operator
-from .table import DistTable, Table
+from .table import DistTable, Table, partitioning_keys, partitioning_kind
 
 
 # ---------------------------------------------------------------------------
@@ -107,13 +107,31 @@ class TSet:
                           {"keys": tuple(keys), "aggs": tuple(aggs), "kw": kw}),
                     self._ctx)
 
-    def orderby(self, key: str, **kw) -> "TSet":
-        return TSet(_Node("orderby", (self._node,), {"key": key, "kw": kw}),
+    def orderby(self, by, **kw) -> "TSet":
+        """Global multi-key sort at the barrier (materializing)."""
+        return TSet(_Node("orderby", (self._node,), {"by": by, "kw": kw}),
                     self._ctx)
 
     def union(self, other: "TSet", **kw) -> "TSet":
         return TSet(_Node("union", (self._node, other._node), {"kw": kw}),
                     self._ctx)
+
+    def window(self, partition_by, order_by, aggs, rows=None,
+               **kw) -> "TSet":
+        """Windowed aggregation barrier (DESIGN.md §9): chunks merge, one
+        sample-sort exchange orders them (elided if the layout holds),
+        the window lanes evaluate in place."""
+        return TSet(_Node("window", (self._node,),
+                          {"partition_by": partition_by,
+                           "order_by": order_by, "aggs": tuple(aggs),
+                           "rows": rows, "kw": kw}), self._ctx)
+
+    def topk(self, by, k: int, **kw) -> "TSet":
+        """Streaming top-k via the combiner pattern: each chunk reduces to
+        its own k candidates (bounded memory), and the barrier merges the
+        per-chunk winners — no chunk ever rematerializes."""
+        return TSet(_Node("topk", (self._node,),
+                          {"by": by, "k": k, "kw": kw}), self._ctx)
 
     # -- sinks ----------------------------------------------------------------
     def collect(self) -> DistTable:
@@ -130,6 +148,12 @@ class TSet:
         merge = {"sum": jnp.sum, "count": jnp.sum, "min": jnp.min,
                  "max": jnp.max, "mean": jnp.mean}[op]
         return merge(stack)
+
+    def quantile(self, column: str, qs, **kw):
+        """Column quantiles at the barrier (materializing; exact by
+        default via the range layout — table_ops.quantile)."""
+        dt = _concat_chunks(_execute(self._node, self._ctx), self._ctx)
+        return table_ops.quantile(dt, column, qs, ctx=self._ctx, **kw)
 
     def to_numpy(self) -> Dict[str, np.ndarray]:
         """Bridge to NumPy (paper Fig 13 line 28 / Fig 17 line 18)."""
@@ -171,9 +195,13 @@ def _concat_chunks(chunks: List[DistTable], ctx: HPTMTContext) -> DistTable:
     # shard-wise concatenation keeps every row on its shard: when all
     # chunks agree on a hash layout, the merged table still has it — this
     # is what lets the combiner barrier's merge groupby elide its shuffle
-    # (DESIGN.md §4)
+    # (DESIGN.md §4).  A RANGE layout does NOT survive: concatenating two
+    # sorted chunks interleaves their orders, so only the single-chunk
+    # early-return above can keep it (DESIGN.md §9).
     parts = {c.partitioning for c in chunks}
     part = parts.pop() if len(parts) == 1 else None
+    if partitioning_kind(part) == "range":
+        part = None
     return DistTable(cols2, counts2, part)
 
 
@@ -193,10 +221,11 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
                 updates = node.payload["fn"](c.columns)
                 new_cols = dict(c.columns)
                 new_cols.update(updates)
-                # a transform that rewrites a hash-key column invalidates
-                # the layout evidence; untouched keys keep it
+                # a transform that rewrites a key column — hash or range —
+                # invalidates the layout evidence; untouched keys keep it
                 part = c.partitioning
-                if part is not None and set(part[0]) & set(updates):
+                if part is not None and \
+                        set(partitioning_keys(part)) & set(updates):
                     part = None
                 out.append(DistTable(new_cols, c.counts, part))
         return out
@@ -238,9 +267,31 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
         return [out]
     if node.kind == "orderby":
         t = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
-        out, _ = table_ops.orderby(t, node.payload["key"], ctx=ctx,
+        out, _ = table_ops.orderby(t, node.payload["by"], ctx=ctx,
                                    **node.payload["kw"])
         return [out]
+    if node.kind == "window":
+        t = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
+        out, ov = table_ops.window_aggregate(
+            t, node.payload["partition_by"], node.payload["order_by"],
+            node.payload["aggs"], rows=node.payload["rows"], ctx=ctx,
+            **node.payload["kw"])
+        # window overflow means truncated (wrong-VALUED) windows, not
+        # dropped rows — unlike the other barriers it must never pass
+        # silently (§2: zero overflow is the exactness certificate)
+        if int(ov) != 0:
+            raise RuntimeError(
+                f"window: {int(ov)} windows were truncated by the "
+                f"cross-shard halo — raise the capacity or repartition")
+        return [out]
+    if node.kind == "topk":
+        # combiner pattern: per-chunk top-k candidates (bounded memory),
+        # merged by one final top-k over the k-per-chunk survivors
+        chunks = _execute(node.inputs[0], ctx)
+        by, k, kw = (node.payload[f] for f in ("by", "k", "kw"))
+        cands = [table_ops.topk(c, by, k, ctx=ctx, **kw) for c in chunks]
+        merged = _concat_chunks(cands, ctx)
+        return [table_ops.topk(merged, by, k, ctx=ctx, **kw)]
     if node.kind == "union":
         a = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
         b = _concat_chunks(_execute(node.inputs[1], ctx), ctx)

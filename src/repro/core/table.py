@@ -176,10 +176,52 @@ def _pad_axis0(x: jnp.ndarray, capacity: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # distributed Table
 # ---------------------------------------------------------------------------
-#: Partitioning metadata: ``(hash_keys, n_shards)`` — the ordered key
-#: columns whose hash assigned each row to its shard, and the shard count
-#: the hash was taken modulo.  ``None`` means "layout unknown".
-Partitioning = Optional[Tuple[Tuple[str, ...], int]]
+#: Partitioning metadata (DESIGN.md §4/§9) — static pytree aux data, one of:
+#:
+#:   * ``(hash_keys, n_shards)`` — rows hash-co-located: the ordered key
+#:     columns whose murmur hash assigned each row to its shard, and the
+#:     shard count the hash was taken modulo;
+#:   * ``("range", keys, ascending, n_shards)`` — rows globally ordered by
+#:     ``keys`` with per-key ``ascending`` directions (NaN-last): shard
+#:     ``s`` holds the ``s``-th contiguous run of the global sort, each
+#:     shard is locally sorted, and rows with equal full keys never
+#:     straddle a shard boundary (the sample-sort splitter rule);
+#:   * ``None`` — layout unknown.
+#:
+#: The hash form stays a 2-tuple for backward compatibility; the range form
+#: is distinguished by its leading ``"range"`` marker (tuple equality can
+#: never confuse the two).  Use the helpers below instead of destructuring.
+Partitioning = Optional[tuple]
+
+RANGE_MARKER = "range"
+
+
+def range_partitioning(keys: Sequence[str], ascending: Sequence[bool],
+                       n_shards: int) -> tuple:
+    """Ordered-layout metadata produced by orderby / range repartition."""
+    return (RANGE_MARKER, tuple(keys), tuple(bool(a) for a in ascending),
+            int(n_shards))
+
+
+def partitioning_kind(part: Partitioning) -> Optional[str]:
+    """``"hash"`` / ``"range"`` / ``None`` for a metadata tuple."""
+    if part is None:
+        return None
+    return RANGE_MARKER if part[0] == RANGE_MARKER else "hash"
+
+
+def partitioning_keys(part: Partitioning) -> Tuple[str, ...]:
+    """The ordered key columns the layout evidence depends on (() if None)."""
+    if part is None:
+        return ()
+    return part[1] if part[0] == RANGE_MARKER else part[0]
+
+
+def partitioning_ascending(part: Partitioning) -> Tuple[bool, ...]:
+    """Per-key sort directions of a range layout (() for hash/None)."""
+    if part is None or part[0] != RANGE_MARKER:
+        return ()
+    return part[2]
 
 
 @jax.tree_util.register_pytree_node_class

@@ -34,14 +34,18 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .array_ops import spmd_allgather, spmd_allreduce
+from .array_ops import spmd_allgather, spmd_allreduce, spmd_ppermute
 from .context import HPTMTContext
 from .exchange import (check_no_reserved, compact_rows, exchange_rows,
-                       hash_shuffle, key_compare_u32, take_hashes)
+                       hash_shuffle, key_compare_u32, lex_order,
+                       order_lanes, range_shuffle, take_hashes)
 from .operator import Abstraction, Style, operator
-from .table import DistTable, Table, _pad_axis0
+from .table import (DistTable, Table, _pad_axis0, partitioning_ascending,
+                    partitioning_keys, partitioning_kind,
+                    range_partitioning)
 
 Cols = Dict[str, jnp.ndarray]
 
@@ -185,82 +189,379 @@ def project(dt: DistTable, columns: Sequence[str], *,
             ctx: HPTMTContext) -> DistTable:
     """Keep only the named columns (Table II). Purely local.
 
-    Partitioning metadata survives only while every hash key column is
-    still present (DESIGN.md §4) — a projection that drops a key loses the
-    evidence of how rows were placed.
+    Partitioning metadata — hash AND range alike — survives only while
+    every key column is still present (DESIGN.md §4/§9): a projection
+    that drops a key loses the evidence of how rows were placed/ordered.
     """
     part = dt.partitioning
-    if part is not None and not set(part[0]) <= set(columns):
+    if part is not None and not set(partitioning_keys(part)) <= set(columns):
         part = None
     return DistTable({k: dt.columns[k] for k in columns}, dt.counts, part)
 
 
 # ===========================================================================
-# OrderBy (Table III) — distributed sample sort
+# OrderBy (Table III) — multi-key distributed sample sort (DESIGN.md §9)
 # ===========================================================================
-def _orderby_impl(cols: Cols, counts: jnp.ndarray, *, key, ascending,
+def _normalize_order(by, ascending, column_names, kwarg: str):
+    """Validate sort keys/directions eagerly; returns ``(keys, ascending)``.
+
+    ``by`` is a column name or a sequence of them; ``ascending`` a bool or
+    a per-key sequence.  Errors name the offending kwarg and value before
+    anything traces (the join-validation style).
+    """
+    keys = (by,) if isinstance(by, str) else tuple(by)
+    if not keys:
+        raise ValueError(f"{kwarg}= needs at least one key column")
+    missing = [k for k in keys if k not in column_names]
+    if missing:
+        raise ValueError(f"{kwarg}= names unknown column(s) {missing}; "
+                         f"table has {sorted(column_names)}")
+    if isinstance(ascending, bool):
+        asc = (ascending,) * len(keys)
+    else:
+        asc = tuple(bool(a) for a in ascending)
+        if len(asc) != len(keys):
+            raise ValueError(
+                f"ascending= has {len(asc)} entries for {len(keys)} "
+                f"{kwarg}= keys — provide one bool, or one per key")
+    return keys, asc
+
+
+def _orderby_impl(cols: Cols, counts: jnp.ndarray, *, keys, ascending,
                   n_shards, bucket, out_capacity, n_samples, axis):
     local_cols, count = _local_parts(cols, counts)
-    capacity = next(iter(local_cols.values())).shape[0]
-    mask = _mask_for(count, capacity)
-    kcol = local_cols[key]
-    skey = kcol if ascending else _negate(kcol)
-
-    # --- sample splitters -------------------------------------------------
-    stride = jnp.maximum(count // n_samples, 1)
-    sidx = jnp.minimum(jnp.arange(n_samples, dtype=jnp.int32) * stride,
-                       jnp.maximum(count - 1, 0))
-    sample = jnp.where(sidx < count, skey[sidx], _max_value(skey.dtype))
-    if axis is not None:
-        sample = spmd_allgather(sample, axis)
-    sample = jnp.sort(sample)
-    total = sample.shape[0]
-    spos = (jnp.arange(1, n_shards, dtype=jnp.int32) * total) // n_shards
-    splitters = sample[spos]
-
-    dest = jnp.searchsorted(splitters, skey, side="right").astype(jnp.int32)
-    dest = jnp.where(mask, dest, n_shards)
-    bufs, valid, ov_send = exchange_rows(local_cols, dest, n_shards,
-                                         bucket, axis)
-    out, new_count, ov_recv = compact_rows(bufs, valid, out_capacity)
-    # local sort
-    okey = out[key] if ascending else _negate(out[key])
-    m = _mask_for(new_count, out_capacity)
-    out, _ = _sort_cols(out, [okey], m)
-    overflow = ov_send + ov_recv
+    out, new_count, overflow = range_shuffle(
+        local_cols, count, keys, ascending, n_shards, bucket, out_capacity,
+        axis, n_samples=n_samples)
     if axis is not None:
         overflow = spmd_allreduce(overflow, axis)
     return out, new_count[None], overflow
 
 
-def _negate(col: jnp.ndarray) -> jnp.ndarray:
-    if jnp.issubdtype(col.dtype, jnp.unsignedinteger):
-        return jnp.iinfo(col.dtype).max - col
-    return -col
-
-
-def _max_value(dtype) -> jnp.ndarray:
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
-
-
 @operator("table.orderby", Abstraction.TABLE)
-def orderby(dt: DistTable, key: str, *, ctx: HPTMTContext,
-            ascending: bool = True, out_capacity: Optional[int] = None,
+def orderby(dt: DistTable, by, *, ctx: HPTMTContext,
+            ascending=True, out_capacity: Optional[int] = None,
             bucket_factor: float = 2.0, n_samples: int = 64,
             ) -> Tuple[DistTable, jnp.ndarray]:
-    """Globally sort rows by ``key`` via sample sort (Table III OrderBy)."""
+    """Globally sort rows via multi-key sample sort (Table III OrderBy).
+
+    ``by`` is one column name or a sequence; ``ascending`` one bool or one
+    per key.  NaN keys sort LAST in BOTH directions (the monotone-lane
+    transform of DESIGN.md §9 — the old float negation flipped NaNs to the
+    front under ``ascending=False``).  Destination shards come from
+    sampled splitters and the rows ride the same single packed AllToAll as
+    a hash shuffle; rows with equal full keys never straddle a shard
+    boundary.
+
+    The output records ``("range", keys, ascending, n_shards)``
+    partitioning metadata — the ordered counterpart of the §4 hash
+    evidence: ``window`` / ``rank`` / ``quantile`` / another ``orderby``
+    on the same keys then trace with ZERO additional AllToAll.  A call on
+    an input already carrying exactly this layout is a traced no-op
+    (unless it also resizes, mirroring ``shuffle``).
+    """
+    keys, asc = _normalize_order(by, ascending, dt.column_names, "by")
     n = ctx.n_shards
-    bucket = _bucket_capacity(dt.capacity, n, bucket_factor)
+    part = range_partitioning(keys, asc, n)
+    if dt.partitioning == part and (out_capacity is None
+                                    or out_capacity == dt.capacity):
+        return dt, jnp.zeros((), jnp.int32)
     impl = functools.partial(
-        _orderby_impl, key=key, ascending=ascending, n_shards=n,
-        bucket=bucket, out_capacity=out_capacity or dt.capacity,
+        _orderby_impl, keys=keys, ascending=asc, n_shards=n,
+        bucket=_bucket_capacity(dt.capacity, n, bucket_factor),
+        out_capacity=out_capacity or dt.capacity,
         n_samples=min(n_samples, dt.capacity))
     cols, counts, overflow = _run_sharded(
         ctx, impl, (dt.columns, dt.counts),
         out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
-    return DistTable(cols, counts), overflow
+    return DistTable(cols, counts, part), overflow
+
+
+# ===========================================================================
+# Windowed aggregation / rank / top-k / quantile (DESIGN.md §9)
+# ===========================================================================
+def _window_impl(cols: Cols, counts: jnp.ndarray, *, pkeys, okeys,
+                 ascending, aggs, rows, n_shards, bucket, out_capacity,
+                 n_samples, need_sort, axis):
+    from repro.window import eval_window  # lazy: window imports core
+
+    local_cols, count = _local_parts(cols, counts)
+    ov = jnp.zeros((), jnp.int32)
+    if need_sort:
+        local_cols, count, ov = range_shuffle(
+            local_cols, count, tuple(pkeys) + tuple(okeys), ascending,
+            n_shards, bucket, out_capacity, axis, n_samples=n_samples)
+    new_cols, o = eval_window(local_cols, count, pkeys=pkeys, okeys=okeys,
+                              ascending=ascending, aggs=aggs, rows=rows,
+                              n_shards=n_shards, axis=axis)
+    overflow = ov + o
+    if axis is not None:
+        overflow = spmd_allreduce(overflow, axis)
+    out = dict(local_cols)
+    out.update(new_cols)
+    return out, count[None], overflow
+
+
+@operator("table.window", Abstraction.TABLE)
+def window_aggregate(dt: DistTable, partition_by, order_by, aggs, *,
+                     ctx: HPTMTContext, rows: Optional[int] = None,
+                     ascending=True, bucket_factor: float = 2.0,
+                     n_samples: int = 64) -> Tuple[DistTable, jnp.ndarray]:
+    """SQL-style window functions over ``(PARTITION BY, ORDER BY)`` groups.
+
+    ``aggs`` entries are ``(column, op)`` or ``(column, op, offset)`` with
+    op in sum/mean/count/min/max (windowed by ``rows``: a trailing
+    row-count window, ``None`` = cumulative/expanding), lag/lead (offset
+    gathers, zero-filled outside the partition), and ``(None,
+    "row_number")`` / ``(None, "rank")``.  Output = input columns plus one
+    labeled column per agg (``{col}_{op}``, ``row_number``, ``rank``);
+    rows never move or drop.  A window wider than its partition clips to
+    the partition (SQL ROWS BETWEEN semantics); partition identity is the
+    ordering identity (all-NaN keys form ONE partition, ±0.0 two).
+
+    The input must be ordered by ``partition_by + order_by``: when its
+    metadata already records exactly that range layout the sort is elided
+    and the whole operator adds ZERO AllToAll and ZERO sort primitives to
+    the trace (halo/carry state moves on ppermute/AllGather, DESIGN.md
+    §9); otherwise one sample-sort exchange runs first — so an
+    ``orderby -> window`` chain on the same keys costs exactly the
+    orderby's single AllToAll.
+
+    Overflow counts *truncated windows*: bounded-lookback lanes (rolling,
+    lag/lead) that needed rows beyond what the cross-shard halo could
+    prove.  Zero overflow certifies exact results (§2).
+    """
+    from repro.window import normalize_aggs
+
+    pkeys = tuple(partition_by) if not isinstance(partition_by, str) \
+        else (partition_by,)
+    missing = [k for k in pkeys if k not in dt.column_names]
+    if missing:
+        raise ValueError(f"partition_by= names unknown column(s) "
+                         f"{missing}; table has {sorted(dt.column_names)}")
+    okeys, asc_o = _normalize_order(order_by, ascending, dt.column_names,
+                                    "order_by")
+    norm = normalize_aggs(aggs, dt.column_names, rows)
+    n = ctx.n_shards
+    max_off = max((p for _, _, op, p in norm if op in ("lag", "lead")),
+                  default=0)
+    lookback = max(rows - 1 if rows is not None else 0, max_off)
+    if n > 1 and lookback > dt.capacity:
+        raise ValueError(
+            f"window lookback {lookback} (rows=/lag/lead offsets) exceeds "
+            f"the per-shard capacity {dt.capacity}; raise the capacity or "
+            f"repartition over fewer shards")
+    keys = pkeys + okeys
+    asc = (True,) * len(pkeys) + asc_o
+    part = range_partitioning(keys, asc, n)
+    impl = functools.partial(
+        _window_impl, pkeys=pkeys, okeys=okeys, ascending=asc, aggs=norm,
+        rows=rows, n_shards=n,
+        bucket=_bucket_capacity(dt.capacity, n, bucket_factor),
+        out_capacity=dt.capacity, n_samples=min(n_samples, dt.capacity),
+        need_sort=dt.partitioning != part)
+    cols, counts, overflow = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis), P()))
+    return DistTable(cols, counts, part), overflow
+
+
+def rank(dt: DistTable, partition_by, order_by, *, ctx: HPTMTContext,
+         ascending=True, **kw) -> Tuple[DistTable, jnp.ndarray]:
+    """Convenience: add SQL ``rank`` (+``row_number``) window columns."""
+    return window_aggregate(
+        dt, partition_by, order_by,
+        [(None, "rank"), (None, "row_number")], ctx=ctx,
+        ascending=ascending, **kw)
+
+
+def _topk_impl(cols: Cols, counts: jnp.ndarray, *, keys, ascending, k,
+               n_shards, axis):
+    local_cols, count = _local_parts(cols, counts)
+    capacity = next(iter(local_cols.values())).shape[0]
+    mask = _mask_for(count, capacity)
+    order = lex_order(order_lanes(local_cols, keys, ascending), mask)
+    take = order[:k]
+    cand = {name: v[take] for name, v in local_cols.items()}
+    ccnt = jnp.minimum(count, k)
+
+    # tree-reduce: log2(p) ppermute rounds, each merging two k-candidate
+    # sets with a 2k-row local sort — no global sort, no AllToAll
+    rounds = max(n_shards - 1, 0).bit_length()
+    for t in range(rounds):
+        stepsz = 1 << t
+        perm = [(s + stepsz, s) for s in range(0, n_shards - stepsz,
+                                               2 * stepsz)]
+        recv = {name: spmd_ppermute(v, axis, perm)
+                for name, v in cand.items()}
+        rcnt = spmd_ppermute(ccnt, axis, perm)
+        merged = {name: jnp.concatenate([v, recv[name]])
+                  for name, v in cand.items()}
+        mvalid = jnp.concatenate([jnp.arange(k) < ccnt,
+                                  jnp.arange(k) < rcnt])
+        morder = lex_order(order_lanes(merged, keys, ascending), mvalid)
+        take = morder[:k]
+        cand = {name: v[take] for name, v in merged.items()}
+        ccnt = jnp.minimum(ccnt + rcnt, k)
+
+    if axis is not None and n_shards > 1:
+        mine = jax.lax.axis_index(axis) == 0
+        keep = mine & (jnp.arange(k) < ccnt)
+        cand = {name: _bcast(keep, v) for name, v in cand.items()}
+        ccnt = jnp.where(mine, ccnt, 0)
+    return cand, ccnt[None]
+
+
+@operator("table.topk", Abstraction.TABLE)
+def topk(dt: DistTable, by, k: int, *, ctx: HPTMTContext,
+         largest: bool = True, ascending=None) -> DistTable:
+    """The first ``k`` rows of the global sort order, WITHOUT a global
+    sort: per-shard top-k candidates tree-reduce over ``log2(p)``
+    ppermute rounds of 2k-row merges (DESIGN.md §9) — zero AllToAll, and
+    local sorts touch at most ``max(capacity, 2k)`` rows.
+
+    ``largest=True`` (default) means descending by ``by``; pass
+    ``ascending=`` per-key directions to override.  The result lands on
+    shard 0, globally sorted — it carries the corresponding range
+    metadata, so a following window/quantile on the same keys elides.
+    """
+    if not isinstance(k, int) or k < 1:
+        raise ValueError(f"k={k!r} must be a positive int")
+    if ctx.n_shards > 1 and k > dt.capacity:
+        # a shard can only surface `capacity` candidates, so a bigger k
+        # would silently return fewer rows than asked — reject eagerly
+        raise ValueError(
+            f"k={k} exceeds the per-shard capacity {dt.capacity}; raise "
+            f"the capacity or use orderby for a full sort")
+    if ascending is None:
+        ascending = not largest
+    keys, asc = _normalize_order(by, ascending, dt.column_names, "by")
+    n = ctx.n_shards
+    impl = functools.partial(_topk_impl, keys=keys, ascending=asc,
+                             k=min(k, dt.capacity), n_shards=n)
+    cols, counts = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
+    return DistTable(cols, counts, range_partitioning(keys, asc, n))
+
+
+def _quantile_impl(cols: Cols, counts: jnp.ndarray, *, column, qs, method,
+                   n_shards, bucket, capacity, n_samples, need_sort, axis):
+    local_cols, count = _local_parts(cols, counts)
+    qarr = jnp.asarray(qs, jnp.float32)
+    if capacity == 0:  # gathers on size-0 columns are ill-formed
+        return jnp.full((len(qs),), jnp.nan, jnp.float32)
+
+    if method == "approx":
+        # splitter-style sketch: pooled regular sample, no exchange
+        col = local_cols[column].astype(jnp.float32)
+        cap = col.shape[0]
+        mask = _mask_for(count, cap) & ~jnp.isnan(col)
+        svals, scnt = compact_rows({"v": col}, mask, cap)[:2]
+        stride = jnp.maximum(scnt // n_samples, 1)
+        sidx = jnp.minimum(jnp.arange(n_samples, dtype=jnp.int32) * stride,
+                           jnp.maximum(scnt - 1, 0))
+        ok = sidx < scnt
+        sample = jnp.where(ok, svals["v"][sidx], jnp.inf)
+        nval = jnp.sum(ok, dtype=jnp.int32)
+        if axis is not None:
+            sample = spmd_allgather(sample, axis)
+            nval = spmd_allreduce(nval, axis)
+        sample = jnp.sort(sample)  # invalid (+inf) entries sort last
+        t = qarr * jnp.maximum(nval - 1, 0).astype(jnp.float32)
+        lo = jnp.floor(t).astype(jnp.int32)
+        hi = jnp.ceil(t).astype(jnp.int32)
+        vlo = sample[jnp.clip(lo, 0, sample.shape[0] - 1)]
+        vhi = sample[jnp.clip(hi, 0, sample.shape[0] - 1)]
+        out = vlo + (t - lo.astype(jnp.float32)) * (vhi - vlo)
+        return jnp.where(nval > 0, out, jnp.nan)
+
+    # exact: rows globally sorted by the column (sorted here if needed);
+    # NaNs order last, so the non-NaN prefix is globally contiguous
+    sort_ov = jnp.zeros((), jnp.int32)
+    if need_sort:
+        local_cols, count, sort_ov = range_shuffle(
+            local_cols, count, (column,), (True,), n_shards, bucket,
+            capacity, axis, n_samples=n_samples)
+    col = local_cols[column].astype(jnp.float32)
+    cap = col.shape[0]
+    mask = _mask_for(count, cap)
+    nn = jnp.sum(mask & ~jnp.isnan(col), dtype=jnp.int32)
+    if axis is not None:
+        nn_all = spmd_allgather(nn[None], axis)
+        me = jax.lax.axis_index(axis)
+        offset = jnp.sum(jnp.where(jnp.arange(n_shards) < me, nn_all, 0))
+    else:
+        nn_all = nn[None]
+        offset = jnp.zeros((), jnp.int32)
+    total = jnp.sum(nn_all)
+    t = qarr * jnp.maximum(total - 1, 0).astype(jnp.float32)
+    lo = jnp.floor(t).astype(jnp.int32)
+    hi = jnp.ceil(t).astype(jnp.int32)
+
+    def fetch(g):  # global rank → value, via one masked psum
+        local = g - offset
+        have = (local >= 0) & (local < nn)
+        v = jnp.where(have, col[jnp.clip(local, 0, cap - 1)], 0.0)
+        return spmd_allreduce(v, axis) if axis is not None else v
+
+    vlo, vhi = fetch(lo), fetch(hi)
+    out = vlo + (t - lo.astype(jnp.float32)) * (vhi - vlo)
+    if axis is not None:
+        sort_ov = spmd_allreduce(sort_ov, axis)
+    # a skew-overflowed internal sort dropped rows: poison, never mislead
+    return jnp.where((total > 0) & (sort_ov == 0), out, jnp.nan)
+
+
+@operator("table.quantile", Abstraction.TABLE)
+def quantile(dt: DistTable, column: str, qs, *, ctx: HPTMTContext,
+             method: str = "auto", bucket_factor: float = 2.0,
+             n_samples: int = 64) -> jnp.ndarray:
+    """Quantiles of one column, numpy ``nanquantile`` semantics (linear
+    interpolation, NaNs excluded).  Returns a ``(len(qs),)`` float32
+    array (replicated).
+
+    ``method="exact"`` reads the true order statistics off the range
+    layout: already-sorted inputs (orderby/topk metadata on ``(column,)``
+    ascending) cost ZERO AllToAll and ZERO sorts — rank→shard arithmetic
+    plus one masked AllReduce per boundary; otherwise one sample-sort
+    exchange runs first.  ``method="approx"`` is the splitter-style
+    fallback: quantiles of a pooled per-shard regular sample (error
+    bounded by the §9 sampling skew bound), never any exchange.
+    ``"auto"`` picks exact when the layout is already there, else approx.
+    """
+    if column not in dt.column_names:
+        raise ValueError(f"column= names unknown column {column!r}; "
+                         f"table has {sorted(dt.column_names)}")
+    if method not in ("auto", "exact", "approx"):
+        raise ValueError(f"unknown quantile method={method!r}; expected "
+                         f"'auto', 'exact' or 'approx'")
+    if np.isscalar(qs) and not isinstance(qs, (str, bytes)):
+        qs = (float(qs),)
+    else:
+        try:
+            qs = tuple(float(q) for q in qs)
+        except TypeError:
+            raise ValueError(f"qs={qs!r} must be a probability or a "
+                             f"sequence of probabilities") from None
+    bad = [q for q in qs if not 0.0 <= q <= 1.0]
+    if bad:
+        raise ValueError(f"qs= values {bad} outside [0, 1]")
+    n = ctx.n_shards
+    # a range layout whose FIRST key is this column ascending proves the
+    # global order the exact path reads ranks from
+    asc = partitioning_ascending(dt.partitioning)
+    sorted_on_col = (partitioning_kind(dt.partitioning) == "range"
+                     and partitioning_keys(dt.partitioning)[:1] == (column,)
+                     and bool(asc and asc[0]))
+    if method == "auto":
+        method = "exact" if (sorted_on_col or n == 1) else "approx"
+    impl = functools.partial(
+        _quantile_impl, column=column, qs=qs, method=method, n_shards=n,
+        bucket=_bucket_capacity(dt.capacity, n, bucket_factor),
+        capacity=dt.capacity, n_samples=min(n_samples, dt.capacity),
+        need_sort=method == "exact" and not sorted_on_col)
+    return _run_sharded(ctx, impl, (dt.columns, dt.counts), out_specs=P())
 
 
 # ===========================================================================

@@ -142,13 +142,22 @@ class DataFrame:
 
     @property
     def partitioning(self):
-        """``(hash_keys, n_shards)`` when rows are hash-co-located, else None.
+        """The layout evidence tuple: ``(hash_keys, n_shards)`` after a
+        hash exchange, ``("range", keys, ascending, n_shards)`` after an
+        orderby/range repartition, else None.
 
-        Operators on matching keys (join/groupby/set ops after a
-        ``repartition`` or another keyed operator) skip their shuffle
-        entirely (DESIGN.md §4).
+        Operators on matching keys skip their shuffle entirely — hash
+        layouts feed join/groupby/set ops (DESIGN.md §4), range layouts
+        feed window/rank/quantile/orderby (DESIGN.md §9).
         """
         return self._t.partitioning
+
+    @property
+    def partitioning_kind(self):
+        """``"hash"``, ``"range"``, or ``None`` — the layout kind."""
+        from repro.core import partitioning_kind
+
+        return partitioning_kind(self._t.partitioning)
 
     # -- relational operators (eager) ------------------------------------------
     def select(self, predicate: Callable) -> "DataFrame":
@@ -184,22 +193,72 @@ class DataFrame:
         self._check(ov, "groupby")
         return DataFrame(out, self._ctx)
 
-    def repartition(self, keys: Sequence[str], **kw) -> "DataFrame":
-        """Hash-shuffle rows so equal ``keys`` share a shard (Fig 2).
+    def repartition(self, keys: Sequence[str], mode: str = "hash",
+                    ascending=True, **kw) -> "DataFrame":
+        """Re-distribute rows: ``mode="hash"`` co-locates equal ``keys`` on
+        a shard (Fig 2); ``mode="range"`` globally sorts by ``keys`` via
+        the sample-sort exchange (DESIGN.md §9) — contiguous key ranges
+        per shard, locally sorted.
 
-        The result records its partitioning, so chained keyed operators on
-        the same keys elide their shuffles.  A no-op when already
-        partitioned on exactly these keys.
+        Either way the result records its layout (see
+        :attr:`partitioning` / :attr:`partitioning_kind`), so chained
+        operators on the same keys elide their shuffles.  A no-op when
+        the layout already holds.  Unknown modes and key columns are
+        rejected eagerly with a ValueError naming the offending kwarg.
         """
+        if mode not in ("hash", "range"):
+            raise ValueError(f"unknown repartition mode={mode!r}; "
+                             f"expected 'hash' or 'range'")
+        keys = (keys,) if isinstance(keys, str) else tuple(keys)
+        missing = [k for k in keys if k not in self.columns]
+        if missing:
+            raise ValueError(f"keys= names unknown column(s) {missing}; "
+                             f"table has {sorted(self.columns)}")
+        if mode == "range":
+            return self.sort_values(list(keys), ascending=ascending, **kw)
         out, ov = table_ops.shuffle(self._t, keys, ctx=self._ctx, **kw)
         self._check(ov, "shuffle")
         return DataFrame(out, self._ctx)
 
-    def sort_values(self, key: str, ascending: bool = True, **kw) -> "DataFrame":
-        out, ov = table_ops.orderby(self._t, key, ctx=self._ctx,
+    def sort_values(self, by, ascending=True, **kw) -> "DataFrame":
+        """Globally sort by one or more columns (multi-key sample sort;
+        per-key ``ascending``, NaNs always last — DESIGN.md §9)."""
+        out, ov = table_ops.orderby(self._t, by, ctx=self._ctx,
                                     ascending=ascending, **kw)
         self._check(ov, "orderby")
         return DataFrame(out, self._ctx)
+
+    def window(self, partition_by, order_by, ascending=True) -> "Window":
+        """SQL-style window builder: ``df.window(["g"], ["t"]).agg([...],
+        rows=32)`` — see :meth:`Window.agg`."""
+        return Window(self, partition_by, order_by, ascending)
+
+    def rank(self, partition_by, order_by, ascending=True,
+             **kw) -> "DataFrame":
+        """Add ``rank`` and ``row_number`` columns per partition/order."""
+        out, ov = table_ops.rank(self._t, partition_by, order_by,
+                                 ctx=self._ctx, ascending=ascending, **kw)
+        self._check(ov, "rank")
+        return DataFrame(out, self._ctx)
+
+    def topk(self, by, k: int, largest: bool = True, **kw) -> "DataFrame":
+        """The global top-``k`` rows by ``by`` — per-shard candidates
+        tree-reduced over ppermute rounds, no global sort (DESIGN.md §9)."""
+        return DataFrame(table_ops.topk(self._t, by, k, ctx=self._ctx,
+                                        largest=largest, **kw), self._ctx)
+
+    def quantile(self, column: str, qs, method: str = "auto", **kw):
+        """Quantiles of ``column`` (numpy ``nanquantile`` semantics).
+
+        Scalar ``qs`` returns a float; a sequence returns a numpy array.
+        ``method="exact"`` is free of extra exchanges on a range-sorted
+        input; ``"approx"`` is the splitter-sample sketch (DESIGN.md §9).
+        """
+        out = table_ops.quantile(self._t, column, qs, ctx=self._ctx,
+                                 method=method, **kw)
+        arr = np.asarray(out)
+        scalar = np.isscalar(qs) and not isinstance(qs, (str, bytes))
+        return float(arr[0]) if scalar else arr
 
     def union(self, other: "DataFrame", **kw) -> "DataFrame":
         out, ov = table_ops.union(self._t, other._t, ctx=self._ctx, **kw)
@@ -236,3 +295,33 @@ class DataFrame:
             raise RuntimeError(
                 f"{op}: {int(overflow)} rows overflowed static capacity — "
                 "re-run with a larger out_capacity/bucket_factor")
+
+
+class Window:
+    """Bound ``(partition_by, order_by)`` spec, built by
+    :meth:`DataFrame.window`; ``.agg(...)`` evaluates window functions."""
+
+    def __init__(self, df: DataFrame, partition_by, order_by, ascending):
+        self._df = df
+        self._partition_by = partition_by
+        self._order_by = order_by
+        self._ascending = ascending
+
+    def agg(self, aggs, rows: Optional[int] = None, **kw) -> DataFrame:
+        """Evaluate window aggregates; returns the DataFrame plus one
+        column per agg (rows never move or drop).
+
+        ``aggs`` entries: ``(col, op)`` with op in
+        sum/mean/count/min/max (over a trailing window of ``rows`` rows,
+        or cumulative when ``rows=None``), ``(col, "lag"/"lead",
+        offset)``, and ``(None, "row_number"/"rank")``.  Already-sorted
+        inputs (``sort_values`` on ``partition_by + order_by``) evaluate
+        with zero additional data movement (DESIGN.md §9); unknown ops,
+        columns, offsets and label collisions raise eagerly with the
+        offending entry named.
+        """
+        out, ov = table_ops.window_aggregate(
+            self._df._t, self._partition_by, self._order_by, aggs,
+            ctx=self._df._ctx, rows=rows, ascending=self._ascending, **kw)
+        DataFrame._check(ov, "window")
+        return DataFrame(out, self._df._ctx)

@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.table import DistTable, Partitioning
+from repro.core.table import DistTable, Partitioning, partitioning_kind
 from .compat import has_pyarrow, require_pyarrow
 from .native import read_hpt_header, write_hpt
 from .schema import Schema
@@ -122,6 +122,12 @@ def write_dataset(root: str,
                               "shard": shard_id})
     if schema is None:
         raise ValueError("write_dataset needs at least one shard")
+    # the manifest's {"keys", "n_shards"} schema records HASH evidence
+    # only (scan re-entry feeds the §4 elision sites); a range layout
+    # (orderby output) is not representable on disk yet — normalize it to
+    # None here so EVERY caller is covered (dropping is always safe, §4)
+    if partitioning is not None and partitioning_kind(partitioning) != "hash":
+        partitioning = None
     manifest = {
         "version": 1,
         "format": fmt,

@@ -1,0 +1,60 @@
+"""Public entry points for the windowed-scan engine (DESIGN.md §9).
+
+Dispatch mirrors ``segment_reduce/ops.py``: the compiled Pallas kernel on
+TPU, the pure-jnp reference elsewhere (itself fast XLA code);
+``force="pallas"`` runs the kernel in interpret mode for testing and must
+match the reference bit-for-bit (shared chunk-scan helper).  The expanding
+(cumulative) scan has no Pallas variant — it is one chunk-sized ladder of
+shift-combines with nothing extra for a kernel to fuse — and always takes
+the reference path.
+
+``windowed_scan`` accepts ``(n,)`` or ``(n, L)`` values; all sum-combining
+window lanes of one operator call ride a single ``(n, L)`` invocation
+(count and both halves of mean derive from it), min/max reduce per column —
+the same lane-fusion contract as the groupby segment reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+segmented_cumulative = _ref.segmented_cumulative
+
+#: Windows wider than this skip the Pallas kernel: a block is at least one
+#: window-sized chunk, and a multi-thousand-row chunk ladder stops fitting
+#: comfortably in VMEM next to its halo block.
+_PALLAS_MAX_WINDOW = 4096
+
+_OPS = ("sum", "min", "max")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4),
+                   static_argnames=("op", "force"))
+def windowed_scan(values: jnp.ndarray, seg_start: jnp.ndarray, window: int,
+                  op: str = "sum", force: str | None = None) -> jnp.ndarray:
+    """Rolling segment-clipped reduction; see ``ref.windowed_scan``.
+
+    ``out[i] = op(values[max(i - window + 1, seg_start[i]) .. i])``.
+    """
+    if op not in _OPS:
+        raise ValueError(f"unknown windowed_scan op {op!r}; expected "
+                         f"one of {_OPS}")
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    v = v.astype(jnp.float32)
+    if force == "pallas" or (force is None and _on_tpu()
+                             and window <= _PALLAS_MAX_WINDOW):
+        out = _kernel.windowed_scan_pallas(v, seg_start, window, op,
+                                           interpret=not _on_tpu())
+    else:
+        out = _ref.windowed_scan(v, seg_start, window, op)
+    return out[:, 0] if squeeze else out

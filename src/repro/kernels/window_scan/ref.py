@@ -1,0 +1,144 @@
+"""Pure-jnp oracle for the blocked segmented windowed scan (DESIGN.md §9).
+
+The windowed-aggregation hot loop: for every row ``i`` of a table sorted by
+``(partition, order)`` keys, reduce the rows of the same partition inside a
+trailing row-count window,
+
+    out[i] = op( values[a .. i] ),   a = max(i - window + 1, seg_start[i]),
+
+for ``op`` in sum/min/max — all sum-combining lanes ride ONE call with the
+values stacked as ``(n, L)`` lanes, exactly like ``segment_reduce_fused``.
+``seg_start[i]`` is the row index where ``i``'s segment (partition) begins;
+segments are contiguous because the table is sorted, so no per-row hash or
+grouping structure is needed.
+
+The algorithm is the classic two-scan sliding-window decomposition, made
+segment-aware:
+
+  1. rows are split into chunks of exactly ``window`` rows;
+  2. a *segmented* inclusive prefix scan runs forward within each chunk and
+     a segmented suffix scan runs backward (both reset at segment starts —
+     :func:`_chunk_scan`, a Hillis–Steele ladder of ``log2(window)``
+     shift-combine steps);
+  3. a window ending at ``i`` either lies entirely inside ``i``'s chunk
+     (then the prefix at ``i`` IS the answer: the window start can never
+     precede the chunk start without leaving the chunk, because chunks are
+     window-sized) or it straddles one chunk boundary (then it is the
+     disjoint union of a suffix in the previous chunk and the prefix at
+     ``i`` — one gather + one combine).
+
+Total work is O(n log window) fully-vectorized ops, zero sorts, zero
+scatters.  The Pallas kernel (``kernel.py``) runs the SAME ``_chunk_scan``
+helper on its VMEM blocks, so interpret-mode kernel output is bit-identical
+to this reference — float summation order and all (tested in
+``tests/test_window.py``).
+
+:func:`segmented_cumulative` reuses the scan ladder at chunk size = n for
+expanding (cumulative) aggregates; lag/lead/row_number/rank need no kernel
+at all (they are gathers off the same segment machinery) and live in
+``repro.window``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _combine(op: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    if op == "sum":
+        return a + b
+    if op == "min":
+        return jnp.minimum(a, b)
+    return jnp.maximum(a, b)
+
+
+def _chunk_scan(v: jnp.ndarray, f: jnp.ndarray, op: str) -> jnp.ndarray:
+    """Segmented inclusive scan along axis 1 of ``v (m, c, L)``.
+
+    ``f (m, c)`` flags rows that START a segment; the scan value at a row
+    covers back to the nearest flagged row (or the chunk start).  A
+    Hillis–Steele ladder: at offset ``d`` a row whose accumulated span is
+    still open combines with the row ``d`` to its left and inherits its
+    completion flag.  The combine ORDER is fixed (left operand is always
+    the earlier span), so float results are deterministic and shared
+    bit-for-bit with the Pallas kernel, which calls this same helper.
+    """
+    c = v.shape[1]
+    ident = jnp.asarray(_IDENTITY[op], v.dtype)
+    d = 1
+    while d < c:
+        sv = jnp.concatenate(
+            [jnp.full_like(v[:, :d], ident), v[:, :-d]], axis=1)
+        sf = jnp.concatenate(
+            [jnp.ones_like(f[:, :d]), f[:, :-d]], axis=1)
+        v = jnp.where(f[..., None], v, _combine(op, sv, v))
+        f = f | sf
+        d *= 2
+    return v
+
+
+def _chunk_suffix(v: jnp.ndarray, new_seg: jnp.ndarray,
+                  op: str) -> jnp.ndarray:
+    """Segmented suffix scan along axis 1: ``out[j] = op(v[j .. e])`` where
+    ``e`` is the last row of ``j``'s segment within the chunk.
+
+    Runs :func:`_chunk_scan` on the reversed chunk; the reversed flags mark
+    rows whose successor starts a new segment (= segment ENDS), which are
+    exactly the reversed scan's segment starts.
+    """
+    rf = jnp.concatenate(
+        [new_seg[:, 1:], jnp.zeros_like(new_seg[:, :1])], axis=1)
+    out = _chunk_scan(v[:, ::-1], rf[:, ::-1], op)
+    return out[:, ::-1]
+
+
+def windowed_scan(values: jnp.ndarray, seg_start: jnp.ndarray, window: int,
+                  op: str = "sum") -> jnp.ndarray:
+    """values (n, L) f32, seg_start (n,) i32 → (n, L) rolling reductions.
+
+    ``out[i] = op(values[max(i - window + 1, seg_start[i]) .. i])`` — the
+    trailing row-count window clipped at the segment start (so a window
+    larger than its partition degrades to an expanding aggregate over the
+    partition, the SQL ROWS BETWEEN semantics).  ``seg_start[i]`` must
+    satisfy ``seg_start[i] <= i`` and be constant within each segment.
+    """
+    n, lanes = values.shape
+    w = int(window)
+    n_pad = -(-n // w) * w
+    ident = jnp.asarray(_IDENTITY[op], values.dtype)
+    vals = jnp.pad(values, ((0, n_pad - n), (0, 0)), constant_values=ident)
+    idx = jnp.arange(n_pad, dtype=jnp.int32)
+    # padding rows are their own segments: they never contaminate a window
+    segs = jnp.concatenate([seg_start.astype(jnp.int32),
+                            idx[n:]]) if n_pad > n else seg_start
+    new_seg = segs == idx
+
+    m = n_pad // w
+    v3 = vals.reshape(m, w, lanes)
+    f3 = new_seg.reshape(m, w)
+    prefix = _chunk_scan(v3, f3, op).reshape(n_pad, lanes)
+    suffix = _chunk_suffix(v3, f3, op).reshape(n_pad, lanes)
+
+    a = jnp.maximum(idx - (w - 1), segs)
+    chunk_start = (idx // w) * w
+    use_prev = a < chunk_start  # window straddles one chunk boundary
+    sval = suffix[jnp.clip(a, 0, n_pad - 1)]
+    out = jnp.where(use_prev[:, None], _combine(op, sval, prefix), prefix)
+    return out[:n]
+
+
+def segmented_cumulative(values: jnp.ndarray, seg_start: jnp.ndarray,
+                         op: str = "sum") -> jnp.ndarray:
+    """values (n, L), seg_start (n,) → expanding (cumulative) reductions.
+
+    ``out[i] = op(values[seg_start[i] .. i])`` — the unbounded-window
+    special case, computed as one chunk-sized segmented scan (the same
+    ladder the windowed scan uses, at chunk size n).  No Pallas variant:
+    the ladder is plain shift-combine XLA code with nothing for a kernel
+    to fuse beyond what the compiler already does.
+    """
+    n = values.shape[0]
+    f = (seg_start.astype(jnp.int32) == jnp.arange(n, dtype=jnp.int32))
+    return _chunk_scan(values[None], f[None], op)[0]

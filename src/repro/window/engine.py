@@ -1,0 +1,313 @@
+"""The windowed-aggregation engine (DESIGN.md §9).
+
+Evaluates every window lane of one ``window_aggregate`` call over a table
+already sorted by ``(partition_by, order_by)`` — the range layout the §9
+exchange establishes and ``DistTable.partitioning`` records.  One pass,
+organized around the segment machinery (``segments.py``):
+
+  * **rolling** sum/mean/count/min/max (``rows=w``): all sum-combining
+    lanes ride ONE fused ``windowed_scan`` (mean = sum lane / derived
+    count; count itself is pure index arithmetic off ``seg_start``),
+    min/max scan per column — the ``kernels/window_scan`` surface;
+  * **cumulative** aggregates (``rows=None``): the same lanes through
+    ``segmented_cumulative`` plus the cross-shard carry chain;
+  * **lag / lead / row_number / rank**: gathers and index arithmetic off
+    the same segment boundaries — no scan, no sort, no kernel.
+
+Cross-shard correctness rides a bounded ``ppermute`` halo (rolling / lag /
+lead) and one summary AllGather carry chain (cumulative / row_number /
+rank); neither is an AllToAll, so a ``window`` on a range-partitioned input
+adds ZERO AllToAll and ZERO sort primitives to the trace (jaxpr-asserted).
+
+Overflow (§2 contract): a window is *truncated* when it needs rows from
+beyond what the halo can prove — the predecessor shard held fewer same-
+partition rows than the lookback (or, for lead, the successor's head ran
+out while the partition could not be proven to end).  Truncated windows
+are counted and returned, never silently wrong-valued: zero overflow is
+the exactness certificate.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exchange
+from repro.core.array_ops import spmd_allgather
+from repro.core.table_ops import _bcast as _mask_rows
+from repro.kernels.window_scan import ops as wops
+
+from .segments import (boundary_flags, chain_carries, flag_starts,
+                       head_halo, tail_halo)
+
+Cols = Dict[str, jnp.ndarray]
+
+#: op → (needs a value column, takes an offset param)
+WINDOW_OPS = {
+    "sum": (True, False), "mean": (True, False), "count": (False, False),
+    "min": (True, False), "max": (True, False),
+    "lag": (True, True), "lead": (True, True),
+    "row_number": (False, False), "rank": (False, False),
+}
+
+
+def normalize_aggs(aggs, columns: Sequence[str], rows: Optional[int]
+                   ) -> List[Tuple[str, Optional[str], str, int]]:
+    """Validate window specs eagerly; returns ``(label, col, op, param)``.
+
+    Accepts ``(col, op)`` and ``(col, op, offset)`` entries; ``col`` is
+    ``None`` for row_number/rank.  Errors name the offending entry before
+    anything traces (the join-validation style).
+    """
+    out = []
+    seen = set(columns)
+    if rows is not None and (not isinstance(rows, int) or rows < 1):
+        raise ValueError(f"rows={rows!r} must be a positive int or None "
+                         f"(cumulative)")
+    if not aggs:
+        raise ValueError("window aggregation needs at least one agg")
+    for entry in aggs:
+        if len(entry) == 2:
+            col, op = entry
+            param = 1
+        elif len(entry) == 3:
+            col, op, param = entry
+        else:
+            raise ValueError(f"window agg {entry!r} must be (col, op) or "
+                             f"(col, op, offset)")
+        if op not in WINDOW_OPS:
+            raise ValueError(f"unknown window op {op!r} in {entry!r}; "
+                             f"expected one of {tuple(WINDOW_OPS)}")
+        needs_col, takes_param = WINDOW_OPS[op]
+        if needs_col or (op == "count" and col is not None):
+            if col not in columns:
+                raise ValueError(f"window agg {entry!r} names unknown "
+                                 f"column {col!r}")
+        elif col is not None:
+            raise ValueError(f"window op {op!r} takes no column; use "
+                             f"(None, {op!r})")
+        if takes_param:
+            if not isinstance(param, int) or param < 1:
+                raise ValueError(f"window agg {entry!r}: offset must be a "
+                                 f"positive int, got {param!r}")
+        elif len(entry) == 3:
+            raise ValueError(f"window op {op!r} takes no offset "
+                             f"({entry!r})")
+        if op in ("row_number", "rank") or (op == "count" and col is None):
+            label = op
+        elif takes_param and param != 1:
+            label = f"{col}_{op}{param}"
+        else:
+            label = f"{col}_{op}"
+        if label in seen:
+            raise ValueError(f"window output column {label!r} collides "
+                             f"with an existing column or another agg")
+        seen.add(label)
+        out.append((label, col, op, param))
+    return out
+
+
+def eval_window(cols: Cols, count: jnp.ndarray, *, pkeys, okeys, ascending,
+                aggs, rows: Optional[int], n_shards: int,
+                axis: Optional[str]) -> Tuple[Cols, jnp.ndarray]:
+    """Evaluate normalized window ``aggs`` over sorted local columns.
+
+    Returns ``(new columns, overflow)``; input columns are untouched (a
+    window never moves or drops rows, it only adds lanes).
+    """
+    cap = next(iter(cols.values())).shape[0]
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    mask = idx < count
+    lanes = exchange.order_lanes(cols, tuple(pkeys) + tuple(okeys),
+                                 ascending)
+    plane = lanes[:, :len(pkeys)]
+    new_seg = boundary_flags(plane, mask)
+    seg_start = flag_starts(new_seg)
+    distributed = axis is not None and n_shards > 1
+
+    def gather(x):  # per-shard summary → (n_shards, ...) pool
+        return spmd_allgather(x[None], axis, tiled=False)[:, 0]
+
+    # ---- lane plan --------------------------------------------------------
+    sum_cols = list(dict.fromkeys(
+        c for _, c, op, _ in aggs if op in ("sum", "mean")))
+    mm_items = list(dict.fromkeys(
+        (c, op) for _, c, op, _ in aggs if op in ("min", "max")))
+    lags = [(lb, c, k) for lb, c, op, k in aggs if op == "lag"]
+    leads = [(lb, c, k) for lb, c, op, k in aggs if op == "lead"]
+    need_rank = any(op == "rank" for _, _, op, _ in aggs)
+    need_rn = any(op == "row_number" for _, _, op, _ in aggs)
+    rolling = rows is not None
+    run_start = flag_starts(boundary_flags(lanes, mask)) if need_rank \
+        else None
+
+    # f32 scan lanes: sum columns first, then one lane per min/max column
+    scan_parts = [cols[c].astype(jnp.float32)[:, None] for c in sum_cols]
+    scan_parts += [cols[c].astype(jnp.float32)[:, None] for c, _ in mm_items]
+    scan_stack = (jnp.concatenate(scan_parts, axis=1) if scan_parts
+                  else jnp.zeros((cap, 0), jnp.float32))
+    n_sum = len(sum_cols)
+
+    # ---- cross-shard carry chain (unbounded lookback) ---------------------
+    carry_cnt = jnp.zeros((), jnp.int32)
+    carry_run = jnp.zeros((), jnp.int32)
+    if distributed:
+        nonempty = count > 0
+        last = jnp.clip(count - 1, 0, cap - 1)
+        head_k, tail_k = gather(plane[0]), gather(plane[last])
+        whole = gather(nonempty & (seg_start[last] == 0))
+        ne = gather(nonempty)
+        me = jax.lax.axis_index(axis)
+        carry_cnt = chain_carries(
+            head_k, tail_k,
+            gather(jnp.where(nonempty, last - seg_start[last] + 1, 0)),
+            whole, ne)[me]
+        if need_rank:
+            carry_run = chain_carries(
+                gather(lanes[0]), gather(lanes[last]),
+                gather(jnp.where(nonempty, last - run_start[last] + 1, 0)),
+                gather(nonempty & (run_start[last] == 0)), ne)[me]
+
+    out: Cols = {}
+    overflow = jnp.zeros((), jnp.int32)
+
+    # ---- backward halo: rolling scans AND lag share one ppermute ----------
+    h_roll = rows - 1 if rolling else 0
+    h = min(max(h_roll, max((k for _, _, k in lags), default=0)), cap)
+    halo_arrays = {"lanes": plane}
+    if rolling and scan_stack.shape[1]:
+        halo_arrays["vals"] = scan_stack
+    for _, c, _ in lags:
+        halo_arrays.setdefault(f"lag:{c}", cols[c])
+    if h > 0:
+        halo, halo_ok = tail_halo(halo_arrays, count, h, n_shards, axis)
+    else:
+        halo = {k2: v[:0] for k2, v in halo_arrays.items()}
+        halo_ok = jnp.zeros((0,), bool)
+    ext_valid = jnp.concatenate([halo_ok, mask])
+    ext_plane = jnp.concatenate([halo["lanes"], plane])
+    ext_seg = flag_starts(boundary_flags(ext_plane, ext_valid))
+    if distributed and h > 0:
+        # truncation: lookback the halo could not prove (§2) — the
+        # predecessor held fewer same-partition rows than the deepest
+        # bounded lookback while the carry chain proves more exist
+        need = jnp.maximum(h - idx, 0)
+        carry_seg = jnp.where(seg_start == 0, carry_cnt, 0)
+        avail = jnp.maximum(h - ext_seg[h:], 0)
+        overflow += jnp.sum(
+            mask & (jnp.minimum(need, carry_seg) > avail), dtype=jnp.int32)
+    for lb, c, k in lags:
+        src_arr = jnp.concatenate([halo[f"lag:{c}"], cols[c]])
+        src = h + idx - k
+        ok = mask & (src >= ext_seg[h + idx])
+        out[lb] = _mask_rows(ok, src_arr[jnp.clip(src, 0, h + cap - 1)])
+
+    # ---- rolling path: blocked windowed scan over the halo-extended rows --
+    sums, mm_out = None, {}
+    if rolling:
+        ext_idx = jnp.arange(h + cap, dtype=jnp.int32)
+        a_ext = jnp.maximum(ext_idx - (rows - 1), ext_seg)
+        cnt_win = (ext_idx - a_ext + 1)[h:]
+        if scan_stack.shape[1]:
+            ext_vals = jnp.concatenate([halo["vals"], scan_stack]) \
+                if h > 0 else scan_stack
+            if n_sum:
+                sums = wops.windowed_scan(ext_vals[:, :n_sum], ext_seg,
+                                          rows, "sum")[h:]
+            for i, (c, op) in enumerate(mm_items):
+                mm_out[(c, op)] = wops.windowed_scan(
+                    ext_vals[:, n_sum + i], ext_seg, rows, op)[h:]
+    else:
+        # ---- cumulative path: local scans + exact carry chain -------------
+        if scan_stack.shape[1]:
+            if n_sum:
+                sums = wops.segmented_cumulative(scan_stack[:, :n_sum],
+                                                 seg_start, "sum")
+            for i, (c, op) in enumerate(mm_items):
+                mm_out[(c, op)] = wops.segmented_cumulative(
+                    scan_stack[:, n_sum + i:n_sum + i + 1], seg_start, op
+                )[:, 0]
+            if distributed:
+                in_first = seg_start == 0
+                if n_sum:
+                    tail_tot = jnp.where(
+                        nonempty, sums[last], jnp.zeros((n_sum,),
+                                                        jnp.float32))
+                    cv = chain_carries(head_k, tail_k, gather(tail_tot),
+                                       whole, ne)[me]
+                    sums = jnp.where(in_first[:, None], sums + cv[None, :],
+                                     sums)
+                for (c, op), v in list(mm_out.items()):
+                    cv = chain_carries(
+                        head_k, tail_k,
+                        gather(jnp.where(nonempty, v[last], 0.0)),
+                        whole, ne, op=op)[me]
+                    comb = jnp.minimum if op == "min" else jnp.maximum
+                    mm_out[(c, op)] = jnp.where(in_first, comb(v, cv), v)
+        cnt_win = idx - seg_start + 1 + jnp.where(seg_start == 0,
+                                                  carry_cnt, 0)
+
+    # ---- leads: forward halo, dynamic gather across the boundary ----------
+    if leads:
+        kmax = min(max(k for _, _, k in leads), cap)
+        lead_arrays = {"lanes": plane}
+        for _, c, _ in leads:
+            lead_arrays.setdefault(f"lead:{c}", cols[c])
+        fhalo, fok = head_halo(lead_arrays, count, kmax, n_shards, axis)
+        # same-partition prefix of the forward halo, per local row: the
+        # chain breaks at the first invalid or different-key halo row
+        if len(pkeys):
+            eq = jnp.all(fhalo["lanes"][None, :, :] == plane[:, None, :],
+                         axis=2) & fok[None, :]
+        else:
+            eq = jnp.broadcast_to(fok[None, :], (cap, kmax))
+        avail_f = jnp.sum(jnp.cumprod(eq.astype(jnp.int32), axis=1),
+                          axis=1).astype(jnp.int32)
+        ended = (avail_f < kmax) & fok[jnp.clip(avail_f, 0, kmax - 1)]
+        for lb, c, k in leads:
+            src = idx + k
+            local_ok = mask & (src < count) & \
+                (seg_start[jnp.clip(src, 0, cap - 1)] == seg_start)
+            hj = src - count
+            halo_ok = mask & (hj >= 0) & (hj < avail_f)
+            hv = fhalo[f"lead:{c}"][jnp.clip(hj, 0, kmax - 1)]
+            lv = cols[c][jnp.clip(src, 0, cap - 1)]
+            out[lb] = jnp.where(local_ok, lv, _mask_rows(halo_ok, hv))
+        if distributed:
+            # truncation is only possible for rows whose partition reaches
+            # the local end (the shard's LAST segment) while some LATER
+            # shard still holds rows — otherwise the table provably ends
+            # and every lead is exact, no matter what the (absent or
+            # empty-successor) halo says
+            in_tail_seg = seg_start == seg_start[last]
+            later_ne = jnp.any(
+                jnp.where(jnp.arange(n_shards) > me, ne, False))
+            need_f = jnp.maximum(idx + kmax - (count - 1), 0)
+            overflow += jnp.sum(
+                mask & in_tail_seg & (need_f > avail_f) & ~ended,
+                dtype=jnp.int32) * later_ne.astype(jnp.int32)
+
+    # ---- ranking lanes ----------------------------------------------------
+    if need_rn:
+        out["row_number"] = jnp.where(
+            mask, idx - seg_start + 1
+            + jnp.where(seg_start == 0, carry_cnt, 0), 0)
+    if need_rank:
+        out["rank"] = jnp.where(
+            mask, run_start - seg_start + 1
+            + jnp.where(seg_start == 0, carry_cnt, 0)
+            - jnp.where(run_start == 0, carry_run, 0), 0)
+
+    # ---- assemble value-agg labels ----------------------------------------
+    cnt_f = jnp.maximum(cnt_win.astype(jnp.float32), 1.0)
+    for lb, c, op, _ in aggs:
+        if op == "count":
+            out[lb] = jnp.where(mask, cnt_win, 0)
+        elif op == "sum":
+            out[lb] = _mask_rows(mask, sums[:, sum_cols.index(c)])
+        elif op == "mean":
+            out[lb] = _mask_rows(mask, sums[:, sum_cols.index(c)] / cnt_f)
+        elif op in ("min", "max"):
+            out[lb] = _mask_rows(mask, mm_out[(c, op)])
+    return out, overflow

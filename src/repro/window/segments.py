@@ -1,0 +1,152 @@
+"""Segment machinery for ordered analytics (DESIGN.md §9).
+
+A table sorted by ``(partition, order)`` keys turns window PARTITIONs into
+contiguous SEGMENTS — runs of rows whose partition-key lanes are equal.  No
+hash table, no re-grouping sort: boundaries are one adjacent-row lane
+compare, and every windowed operator (rolling aggregates, cumulatives,
+lag/lead, row_number, rank) consumes the same two arrays:
+
+  * ``new_seg (n,) bool`` — row starts a new segment;
+  * ``seg_start (n,) int32`` — index of the row's segment start (a running
+    ``cummax`` over flagged indices — no reset needed because segments are
+    contiguous).
+
+**Partition identity is the ordering identity** (the `sort_key_lanes`
+transform): all NaN bit patterns collapse to one lane value, so NaN keys
+form ONE partition (they are one contiguous block of the sort, where the
+bitwise §8 identity would split equal-sort-position NaNs into
+non-contiguous groups); ``-0.0`` and ``+0.0`` order apart and are two
+partitions.  Deterministic, documented, and consistent with what the sort
+itself can guarantee.
+
+Cross-shard state (a range-partitioned table may split one partition across
+a shard boundary — equal FULL keys never straddle, but equal partition keys
+with different order keys can):
+
+  * :func:`tail_halo` / leading rows — the last ``h`` valid rows of the
+    previous shard, moved with one ``ppermute`` so bounded-lookback ops
+    (rolling windows, lag) read across the boundary;
+  * :func:`chain_carries` — per-shard boundary summaries pooled with one
+    small AllGather, then chained so unbounded-lookback ops (cumulatives,
+    row_number, rank) add the exact contribution of every preceding shard
+    of the same partition.  The chain walks shards right-to-left and stays
+    alive through shards that are entirely one partition (and through
+    empty shards, which sample-sort splitter duplication can produce).
+
+Neither mechanism is an AllToAll: the orderby→window elision contract
+("zero additional AllToAll") is preserved on a real mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.array_ops import spmd_ppermute
+# one op table for the whole ordered stack: the carry chain must combine
+# exactly like the scans it extends (kernels/window_scan/ref.py)
+from repro.kernels.window_scan.ref import _IDENTITY, _combine
+
+Cols = Dict[str, jnp.ndarray]
+
+
+def boundary_flags(lanes: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """``new_seg`` flags from ``(n, L)`` key lanes (L may be 0 = one global
+    partition).  Invalid rows are each their own segment, so padding can
+    never join — or bridge — a real partition."""
+    n = valid.shape[0]
+    first = jnp.zeros((n,), bool).at[0].set(True)
+    if lanes.shape[1]:
+        diff = jnp.concatenate(
+            [jnp.ones((1,), bool),
+             jnp.any(lanes[1:] != lanes[:-1], axis=1)])
+    else:
+        diff = first
+    prev_invalid = jnp.concatenate([jnp.ones((1,), bool), ~valid[:-1]])
+    return first | diff | prev_invalid | ~valid
+
+
+def flag_starts(flags: jnp.ndarray) -> jnp.ndarray:
+    """``seg_start[i]`` = index of the nearest flagged row at or before i."""
+    idx = jnp.arange(flags.shape[0], dtype=jnp.int32)
+    return jax.lax.cummax(jnp.where(flags, idx, 0))
+
+
+def tail_halo(arrays: Cols, count: jnp.ndarray, h: int, n_shards: int,
+              axis: Optional[str]) -> Tuple[Cols, jnp.ndarray]:
+    """Last ``h`` valid rows of each shard, delivered to the NEXT shard.
+
+    Returns ``(received arrays (h, ...), received valid (h,))`` — the rows
+    globally immediately preceding this shard's row 0, oldest first, with
+    missing positions (short predecessor, or shard 0's absent predecessor —
+    ppermute delivers zeros there) marked invalid.
+    """
+    j = jnp.arange(h, dtype=jnp.int32)
+    src = count - h + j
+    ok = src >= 0
+    taken = {}
+    for name, v in arrays.items():
+        g = v[jnp.clip(src, 0, v.shape[0] - 1)]
+        taken[name] = jnp.where(ok.reshape((-1,) + (1,) * (g.ndim - 1)), g,
+                                jnp.zeros_like(g))
+    if axis is None or n_shards == 1:
+        return {k: jnp.zeros_like(v) for k, v in taken.items()}, \
+            jnp.zeros((h,), bool)
+    perm = [(s, s + 1) for s in range(n_shards - 1)]
+    recv = {k: spmd_ppermute(v, axis, perm) for k, v in taken.items()}
+    return recv, spmd_ppermute(ok, axis, perm)
+
+
+def head_halo(arrays: Cols, count: jnp.ndarray, k: int, n_shards: int,
+              axis: Optional[str]) -> Tuple[Cols, jnp.ndarray]:
+    """First ``k`` valid rows of each shard, delivered to the PREVIOUS
+    shard — the forward (lead) counterpart of :func:`tail_halo`."""
+    j = jnp.arange(k, dtype=jnp.int32)
+    ok = j < count
+    taken = {}
+    for name, v in arrays.items():
+        g = v[jnp.clip(j, 0, v.shape[0] - 1)]
+        taken[name] = jnp.where(ok.reshape((-1,) + (1,) * (g.ndim - 1)), g,
+                                jnp.zeros_like(g))
+    if axis is None or n_shards == 1:
+        return {k2: jnp.zeros_like(v) for k2, v in taken.items()}, \
+            jnp.zeros((k,), bool)
+    perm = [(s + 1, s) for s in range(n_shards - 1)]
+    recv = {k2: spmd_ppermute(v, axis, perm) for k2, v in taken.items()}
+    return recv, spmd_ppermute(ok, axis, perm)
+
+
+def chain_carries(head_keys: jnp.ndarray, tail_keys: jnp.ndarray,
+                  tail_vals: jnp.ndarray, whole: jnp.ndarray,
+                  nonempty: jnp.ndarray, op: str = "sum") -> jnp.ndarray:
+    """Cross-shard prefix carry for each shard's HEAD segment.
+
+    All inputs are AllGathered per-shard summaries, leading dim =
+    ``n_shards``: first/last valid row's partition-key lanes, the reduction
+    of each shard's TAIL segment over the carried lanes, whether the whole
+    shard is one segment, and whether it holds any row.  Returns the
+    ``(n_shards, ...)`` carries: ``carry[s]`` = reduction over every row of
+    ``s``'s head partition on shards ``< s`` (the op identity when the
+    partition starts at shard ``s``).
+
+    The double loop is static (``n_shards²`` scalar-ish ops at trace time)
+    and runs identically on every shard — each picks its own row via
+    ``axis_index``.  Empty shards are transparent: the chain walks through
+    them, since splitter duplication can park an empty shard mid-partition.
+    """
+    p = head_keys.shape[0]
+    ident = jnp.full(tail_vals.shape[1:], _IDENTITY[op], tail_vals.dtype)
+    outs = []
+    for s in range(p):
+        carry = ident
+        alive = jnp.asarray(True)
+        for r in range(s - 1, -1, -1):
+            keymatch = jnp.all(tail_keys[r] == head_keys[s]) \
+                if head_keys.shape[1] else jnp.asarray(True)
+            link = alive & nonempty[r] & keymatch
+            carry = jnp.where(link, _combine(op, tail_vals[r], carry),
+                              carry)
+            alive = alive & (~nonempty[r] | (link & whole[r]))
+        outs.append(carry)
+    return jnp.stack(outs)

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import DistTable, Table, local_context, table_ops
+from repro.core import (DistTable, Table, local_context, partitioning_kind,
+                        range_partitioning, table_ops)
 from repro.core.dataflow import TSet
 from repro.dataframe.frame import DataFrame
 
@@ -53,9 +54,13 @@ def test_partitioning_lifecycle():
     assert table_ops.project(sh, ["k"], ctx=CTX).partitioning == (("k",), 1)
     assert table_ops.project(sh, ["v"], ctx=CTX).partitioning is None
 
-    # orderby range-partitions -> hash layout dropped
+    # orderby range-partitions: the hash layout is REPLACED by range
+    # evidence (DESIGN.md §9), never silently dropped
     srt, _ = table_ops.orderby(sh, "v", ctx=CTX)
-    assert srt.partitioning is None
+    assert srt.partitioning == range_partitioning(("v",), (True,), 1)
+    assert partitioning_kind(srt.partitioning) == "range"
+    # ...and hash-elision sites can never confuse it with hash evidence
+    assert srt.partitioning != (("v",), 1)
 
     # keyed operators stamp their output
     g, _ = table_ops.groupby_aggregate(dt, ["k"], [("v", "sum")], ctx=CTX)
