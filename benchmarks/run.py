@@ -16,11 +16,13 @@
   bench_kernels       → Pallas kernel interpret-mode vs ref overhead
   bench_scan_ingest   → storage scan (DESIGN.md §5): full vs pushdown,
                         native .hpt always, Parquet when pyarrow present
+  bench_spill_join    → out-of-core join beyond budget_rows (DESIGN.md
+                        §10): chunk-streamed, exactness- and RSS-gated
 
 Methodology: every operator case is jitted ONCE and the compiled function is
 timed with a ``block_until_ready`` per iteration — numbers are steady-state
-execution, not retrace time.  Prints ``name,us_per_call,derived`` CSV
-(derived = rows/s, tokens/s, …) and writes ``BENCH_shuffle.json`` next to
+execution, not retrace time.  Prints ``name,us_per_call,derived,peak_rss_mb``
+CSV (derived = rows/s, tokens/s, …) and writes ``BENCH_shuffle.json`` next to
 this file so the perf trajectory is tracked across PRs.
 
 Wall times are single-host CPU numbers — scaling behaviour at pod size is
@@ -45,6 +47,42 @@ ROWS = []
 DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_shuffle.json")
 
+#: committed peak-RSS cap for the out-of-core spill case (DESIGN.md §10):
+#: the bounded-memory promise as a number.  The spill bench joins an input
+#: far larger than its budget_rows working set; if its peak RSS climbs past
+#: this, the engine stopped being out-of-core and main() exits non-zero.
+SPILL_RSS_BUDGET_MB = 4096.0
+RSS_VIOLATIONS = []
+
+
+def _peak_rss_mb() -> float:
+    """Process peak RSS in MB — VmHWM (resettable) with a rusage fallback."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    try:
+        import resource
+
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    except Exception:
+        return float("nan")
+
+
+def _reset_peak_rss() -> None:
+    """Reset the kernel's VmHWM watermark so per-case peaks are isolated
+    (Linux /proc/self/clear_refs; silently a no-op elsewhere — then VmHWM
+    is a process-lifetime high-water mark and per-case numbers only ever
+    over-report, never under-report)."""
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+    except OSError:
+        pass
+
 
 def _timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """µs per call of an already-jitted ``fn``, blocking every iteration."""
@@ -57,8 +95,9 @@ def _timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def _emit(name: str, us: float, derived: str):
-    ROWS.append((name, us, derived))
-    print(f"{name},{us:.1f},{derived}", flush=True)
+    rss = _peak_rss_mb()
+    ROWS.append((name, us, derived, rss))
+    print(f"{name},{us:.1f},{derived},{rss:.0f}", flush=True)
 
 
 def _table(n: int, n_keys: int = None, seed: int = 0) -> DistTable:
@@ -395,10 +434,67 @@ def bench_scan_ingest(n: int = 500_000):
             shutil.rmtree(root, ignore_errors=True)
 
 
-def write_json(path: str) -> None:
-    """Machine-readable perf record (name → µs + derived metric)."""
-    data = {name: {"us_per_call": round(us, 1), "derived": derived}
-            for name, us, derived in ROWS}
+
+def bench_spill_join(n: int = 2_000_000, budget_rows: int = 262_144):
+    """Out-of-core join: input far beyond the committed per-step budget.
+
+    The acceptance case for DESIGN.md §10: an ``n``-row probe side joined
+    at a ``budget_rows`` working-set cap — the spill engine must complete
+    it exactly (row count cross-checked against a numpy membership oracle,
+    zero residual overflow) while peak RSS stays under the committed
+    ``SPILL_RSS_BUDGET_MB``.  The result is consumed chunk-wise, never
+    materialized whole.  Wall time rides the regression gate like every
+    other case; the RSS cap failure is collected in ``RSS_VIOLATIONS``
+    and fails the run at the end of main().
+    """
+    from repro.spill import spill_join
+
+    rng = np.random.default_rng(3)
+    n_keys = n // 4
+    lk = rng.integers(0, n_keys, n).astype(np.int32)
+    rk = rng.permutation(n_keys)[: n_keys // 2].astype(np.int32)  # unique
+    left = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(lk), "v": jnp.asarray(lk, jnp.float32)}), CTX)
+    right = DistTable.from_local(Table.from_arrays(
+        {"k": jnp.asarray(rk), "w": jnp.asarray(rk, jnp.float32)}), CTX)
+    expected = int(np.isin(lk, rk).sum())  # right keys unique: 1 match/row
+
+    _reset_peak_rss()
+    t0 = time.perf_counter()
+    res = spill_join(left, right, ("k",), ctx=CTX, budget_rows=budget_rows)
+    rows_out = 0
+    for chunk in res.chunks():  # chunk-wise consumption, bounded memory
+        rows_out += int(chunk.num_rows())
+    report, stats = res.report, res.stats
+    res.close()
+    us = (time.perf_counter() - t0) * 1e6
+    peak = _peak_rss_mb()
+
+    name = f"spill_join_{n // 1000}k_budget{budget_rows // 1024}k"
+    assert report.is_exact(), f"residual overflow: {report}"
+    assert rows_out == expected, (rows_out, expected)
+    _emit(name, us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s "
+                    f"parts={stats.n_parts} "
+                    f"spilled={stats.bytes_spilled >> 20}MB")
+    if peak > SPILL_RSS_BUDGET_MB:
+        RSS_VIOLATIONS.append((name, peak))
+        print(f"# RSS VIOLATION: {name} peaked at {peak:.0f}MB "
+              f"> committed {SPILL_RSS_BUDGET_MB:.0f}MB budget", flush=True)
+
+
+def write_json(path: str, merge: bool = False) -> None:
+    """Machine-readable perf record (name → µs + derived metric).
+
+    ``merge=True`` updates only the cases that ran into an existing file
+    (the ``--spill-only`` job must not clobber the committed baseline's
+    other entries)."""
+    data = {}
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data.update({name: {"us_per_call": round(us, 1), "derived": derived,
+                        "peak_rss_mb": round(rss, 1)}
+                 for name, us, derived, rss in ROWS})
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -428,7 +524,7 @@ def compare_json(base: dict, baseline_name: str, threshold: float,
     regressions = []
     print(f"# compare vs {baseline_name} "
           f"(fail > {threshold:+.0%} and > {min_delta_us:.0f}us)")
-    for name, us, _ in ROWS:
+    for name, us, *_ in ROWS:
         if name not in base:
             print(f"# {name}: no baseline, skipped")
             continue
@@ -460,6 +556,9 @@ def main(argv=None) -> None:
     p.add_argument("--min-delta-us", type=float, default=1000.0,
                    help="absolute slowdown (us) below which --compare "
                         "treats a relative regression as noise")
+    p.add_argument("--spill-only", action="store_true",
+                   help="run only the memory-capped out-of-core spill "
+                        "case at full size (the CI spill job)")
     p.add_argument("--compare-files", nargs=2, metavar=("FRESH", "BASELINE"),
                    help="compare two existing records (no benches run): "
                         "the like-for-like gate — both sides same sizes, "
@@ -470,7 +569,8 @@ def main(argv=None) -> None:
         fresh_path, baseline_path = args.compare_files
         with open(fresh_path) as f:
             for name, rec in json.load(f).items():
-                ROWS.append((name, rec["us_per_call"], rec["derived"]))
+                ROWS.append((name, rec["us_per_call"], rec["derived"],
+                             rec.get("peak_rss_mb", float("nan"))))
         with open(baseline_path) as f:
             base = json.load(f)
         if compare_json(base, baseline_path, args.threshold,
@@ -486,7 +586,16 @@ def main(argv=None) -> None:
         with open(args.compare) as f:
             base = json.load(f)
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,peak_rss_mb")
+    if args.spill_only:
+        bench_spill_join()
+        write_json(args.out, merge=True)
+        if RSS_VIOLATIONS:
+            print(f"# FAILED: peak RSS over the {SPILL_RSS_BUDGET_MB:.0f}MB "
+                  "budget: " + ", ".join(f"{n}={p:.0f}MB"
+                                         for n, p in RSS_VIOLATIONS))
+            raise SystemExit(1)
+        return
     if args.quick:
         bench_table_ops(n=20_000)
         bench_shuffle(n=50_000)
@@ -499,6 +608,7 @@ def main(argv=None) -> None:
         bench_topk(n=50_000)
         bench_setop_union(n=20_000)
         bench_scan_ingest(n=50_000)
+        bench_spill_join(n=400_000, budget_rows=65_536)
     else:
         bench_array_ops()
         bench_table_ops()
@@ -515,12 +625,20 @@ def main(argv=None) -> None:
         bench_lm_step()
         bench_kernels()
         bench_scan_ingest()
+        bench_spill_join()
     write_json(args.out)
     print(f"# {len(ROWS)} benchmarks complete")
+    failures = 0
     if base is not None:
-        if compare_json(base, args.compare, args.threshold,
-                        args.min_delta_us):
-            raise SystemExit(1)
+        failures += compare_json(base, args.compare, args.threshold,
+                                 args.min_delta_us)
+    if RSS_VIOLATIONS:
+        print(f"# FAILED: {len(RSS_VIOLATIONS)} case(s) over the "
+              f"{SPILL_RSS_BUDGET_MB:.0f}MB RSS budget: "
+              + ", ".join(f"{n}={p:.0f}MB" for n, p in RSS_VIOLATIONS))
+        failures += len(RSS_VIOLATIONS)
+    if failures:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

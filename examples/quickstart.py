@@ -8,6 +8,8 @@ all the same code single-device or on a mesh.
 Part 2 adds the storage layer (DESIGN.md §5): a generated on-disk dataset
 is scanned back with projection + predicate pushdown, joined, aggregated,
 and bridged to arrays — write → scan → join → groupby → ``to_jax()``.
+Part 6 runs a join whose working set exceeds its memory budget through
+the out-of-core spill path (DESIGN.md §10) — same API, ``spill="auto"``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -124,6 +126,25 @@ def main():
           f"{len(movers)}")
     top = ticks.topk("price", 5)
     print(f"top-5 prices: {np.asarray(top.to_numpy()['price']).round(2)}")
+
+    # --- 6. out-of-core: a join bigger than its memory budget (§10) --------
+    # The same join API, but the working set is capped at budget_rows: the
+    # inputs hash-partition to disk, each partition-pair streams through
+    # the in-memory engine with its shuffle elided, and the chunks merge
+    # back — bit-exact, with the OverflowReport as the certificate.
+    big = 50_000
+    k = rng.integers(0, big // 4, big).astype(np.int32)
+    orders = DataFrame.from_dict(
+        {"k": k, "amount": rng.uniform(0, 9, big).astype(np.float32)}, ctx)
+    dims = DataFrame.from_dict(
+        {"k": np.arange(big // 8, dtype=np.int32),
+         "rate": rng.uniform(0, 1, big // 8).astype(np.float32)}, ctx)
+    enriched = orders.join(dims, on=["k"], spill="auto", budget_rows=4096)
+    rep = enriched.overflow_report
+    rep.assert_exact()        # zero rows lost — spill recovered every one
+    print(f"out-of-core join: {len(enriched)} rows at a 4096-row budget "
+          f"({rep.total_recovered} rows spill-recovered); "
+          f"exact={rep.is_exact()}")
     print("quickstart OK")
 
 

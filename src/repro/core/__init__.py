@@ -5,3 +5,4 @@ from .operator import Abstraction, Execution, Style, get_operator, list_operator
 from .table import (DistTable, Table, hash_columns, partitioning_keys,
                     partitioning_kind, range_partitioning)
 from .dataflow import TSet
+from .report import OverflowError, OverflowReport

@@ -23,6 +23,7 @@ import numpy as np
 from . import table_ops
 from .context import HPTMTContext
 from .operator import Abstraction, Execution, Style, operator
+from .report import OverflowReport
 from .table import DistTable, Table, partitioning_keys, partitioning_kind
 
 
@@ -42,11 +43,36 @@ class TSet:
     def __init__(self, node: _Node, ctx: HPTMTContext):
         self._node = node
         self._ctx = ctx
+        self._last_report: Optional[OverflowReport] = None
+
+    @property
+    def overflow_report(self) -> Optional[OverflowReport]:
+        """Overflow accounting from the most recent materialization
+        (``collect``/``reduce``/``quantile``/``to_numpy``), or ``None``
+        before the first one.  Barrier overflows that previously vanished
+        — join fan-out, orderby/union capacity, per-chunk groupby partials
+        — all land here, plus any spill-recovery evidence a
+        :meth:`from_spill` source carries (DESIGN.md §10)."""
+        return self._last_report
 
     # -- sources -----------------------------------------------------------
     @classmethod
     def from_chunks(cls, chunks: Sequence[DistTable], ctx: HPTMTContext) -> "TSet":
         return cls(_Node("source", payload={"chunks": list(chunks)}), ctx)
+
+    @classmethod
+    def from_spill(cls, result, ctx: Optional[HPTMTContext] = None) -> "TSet":
+        """Source a TSet from a completed spill result (DESIGN.md §10).
+
+        The spilled chunk stream becomes the source chunks — partitioning
+        metadata intact, so downstream barriers keep eliding — and the
+        spill report (recovered rows, residual losses) is folded into
+        every materialization's :attr:`overflow_report`.  Duck-typed on
+        ``.chunks()`` / ``.report`` so core never imports the spill
+        layer."""
+        node = _Node("source", payload={"chunks": list(result.chunks()),
+                                        "report": result.report})
+        return cls(node, ctx or result._ctx)
 
     @classmethod
     def from_table(cls, dt: DistTable, ctx: HPTMTContext,
@@ -136,12 +162,14 @@ class TSet:
     # -- sinks ----------------------------------------------------------------
     def collect(self) -> DistTable:
         """Execute the dataflow graph and materialize the result."""
-        chunks = _execute(self._node, self._ctx)
+        self._last_report = report = OverflowReport()
+        chunks = _execute(self._node, self._ctx, report)
         return _concat_chunks(chunks, self._ctx)
 
     def reduce(self, column: str, op: str):
         """Streaming scalar aggregate (per-chunk partials, merged)."""
-        chunks = _execute(self._node, self._ctx)
+        self._last_report = report = OverflowReport()
+        chunks = _execute(self._node, self._ctx, report)
         parts = [table_ops.aggregate(c, column, op, ctx=self._ctx)
                  for c in chunks]
         stack = jnp.stack(parts)
@@ -152,7 +180,9 @@ class TSet:
     def quantile(self, column: str, qs, **kw):
         """Column quantiles at the barrier (materializing; exact by
         default via the range layout — table_ops.quantile)."""
-        dt = _concat_chunks(_execute(self._node, self._ctx), self._ctx)
+        self._last_report = report = OverflowReport()
+        dt = _concat_chunks(_execute(self._node, self._ctx, report),
+                            self._ctx)
         return table_ops.quantile(dt, column, qs, ctx=self._ctx, **kw)
 
     def to_numpy(self) -> Dict[str, np.ndarray]:
@@ -205,12 +235,18 @@ def _concat_chunks(chunks: List[DistTable], ctx: HPTMTContext) -> DistTable:
     return DistTable(cols2, counts2, part)
 
 
-def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
+def _execute(node: _Node, ctx: HPTMTContext,
+             report: Optional[OverflowReport] = None) -> List[DistTable]:
+    if report is None:
+        report = OverflowReport()
     if node.kind == "source":
+        src_report = node.payload.get("report")
+        if src_report is not None:
+            report.merge(src_report)
         return list(node.payload["chunks"])
 
     if node.kind in ("select", "project", "map"):
-        chunks = _execute(node.inputs[0], ctx)
+        chunks = _execute(node.inputs[0], ctx, report)
         out = []
         for c in chunks:
             if node.kind == "select":
@@ -236,7 +272,7 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
         # on the keys; _concat_chunks preserves the common layout, so the
         # merge groupby below elides its shuffle — one exchange per chunk,
         # zero at the barrier (DESIGN.md §4).
-        chunks = _execute(node.inputs[0], ctx)
+        chunks = _execute(node.inputs[0], ctx, report)
         keys, aggs = node.payload["keys"], node.payload["aggs"]
         partial_aggs, merge_aggs = table_ops.split_aggs(aggs)
         # map-side combine is essential here, not just an optimisation: a
@@ -247,12 +283,14 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
         kw.setdefault("combine", True)
         partials = []
         for c in chunks:
-            part, _ = table_ops.groupby_aggregate(
+            part, ov = table_ops.groupby_aggregate(
                 c, keys, partial_aggs, ctx=ctx, **kw)
+            report.add("groupby.slots", ov)
             partials.append(part)
         merged = _concat_chunks(partials, ctx)
-        final, _ = table_ops.groupby_aggregate(
+        final, ov = table_ops.groupby_aggregate(
             merged, keys, merge_aggs, ctx=ctx, **kw)
+        report.add("groupby.slots", ov)
         final = DistTable(
             table_ops.finalize_agg_cols(final.columns, aggs, merge_aggs),
             final.counts, final.partitioning)
@@ -260,18 +298,20 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
 
     # materializing barriers
     if node.kind == "join":
-        left = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
-        right = _concat_chunks(_execute(node.inputs[1], ctx), ctx)
-        out, _ = table_ops.join(left, right, node.payload["keys"], ctx=ctx,
-                                **node.payload["kw"])
+        left = _concat_chunks(_execute(node.inputs[0], ctx, report), ctx)
+        right = _concat_chunks(_execute(node.inputs[1], ctx, report), ctx)
+        out, ov = table_ops.join(left, right, node.payload["keys"], ctx=ctx,
+                                 **node.payload["kw"])
+        report.add("join.fanout", ov)
         return [out]
     if node.kind == "orderby":
-        t = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
-        out, _ = table_ops.orderby(t, node.payload["by"], ctx=ctx,
-                                   **node.payload["kw"])
+        t = _concat_chunks(_execute(node.inputs[0], ctx, report), ctx)
+        out, ov = table_ops.orderby(t, node.payload["by"], ctx=ctx,
+                                    **node.payload["kw"])
+        report.add("orderby.capacity", ov)
         return [out]
     if node.kind == "window":
-        t = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
+        t = _concat_chunks(_execute(node.inputs[0], ctx, report), ctx)
         out, ov = table_ops.window_aggregate(
             t, node.payload["partition_by"], node.payload["order_by"],
             node.payload["aggs"], rows=node.payload["rows"], ctx=ctx,
@@ -279,6 +319,7 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
         # window overflow means truncated (wrong-VALUED) windows, not
         # dropped rows — unlike the other barriers it must never pass
         # silently (§2: zero overflow is the exactness certificate)
+        report.add("window.truncated", ov)
         if int(ov) != 0:
             raise RuntimeError(
                 f"window: {int(ov)} windows were truncated by the "
@@ -287,15 +328,16 @@ def _execute(node: _Node, ctx: HPTMTContext) -> List[DistTable]:
     if node.kind == "topk":
         # combiner pattern: per-chunk top-k candidates (bounded memory),
         # merged by one final top-k over the k-per-chunk survivors
-        chunks = _execute(node.inputs[0], ctx)
+        chunks = _execute(node.inputs[0], ctx, report)
         by, k, kw = (node.payload[f] for f in ("by", "k", "kw"))
         cands = [table_ops.topk(c, by, k, ctx=ctx, **kw) for c in chunks]
         merged = _concat_chunks(cands, ctx)
         return [table_ops.topk(merged, by, k, ctx=ctx, **kw)]
     if node.kind == "union":
-        a = _concat_chunks(_execute(node.inputs[0], ctx), ctx)
-        b = _concat_chunks(_execute(node.inputs[1], ctx), ctx)
-        out, _ = table_ops.union(a, b, ctx=ctx, **node.payload["kw"])
+        a = _concat_chunks(_execute(node.inputs[0], ctx, report), ctx)
+        b = _concat_chunks(_execute(node.inputs[1], ctx, report), ctx)
+        out, ov = table_ops.union(a, b, ctx=ctx, **node.payload["kw"])
+        report.add("union.capacity", ov)
         return [out]
     raise ValueError(f"unknown node {node.kind}")
 

@@ -46,6 +46,11 @@ Cols = Dict[str, jnp.ndarray]
 #: these after a shuffle instead of recomputing ``hash_columns``.
 H1_NAME = "_h1"
 H2_NAME = "_h2"
+#: Reserved hidden-column name for carried order lanes: the spill engine
+#: (``repro.spill``) persists :func:`order_lanes` in its on-disk runs so
+#: re-ingested partitions re-sort on the host without recomputing the
+#: directional transform (DESIGN.md §10).
+LANES_NAME = "_lanes"
 
 
 # ===========================================================================
@@ -425,12 +430,12 @@ def key_compare_u32(cols: Cols, key_names: Sequence[str]) -> jnp.ndarray:
 
 
 def check_no_reserved(names: Sequence[str]) -> None:
-    """Reject user tables that use the reserved carried-hash column names."""
-    clash = {H1_NAME, H2_NAME} & set(names)
+    """Reject user tables that use the reserved hidden-column names."""
+    clash = {H1_NAME, H2_NAME, LANES_NAME} & set(names)
     if clash:
         raise ValueError(
             f"column names {sorted(clash)} are reserved for carried row "
-            f"hashes (core/exchange.py); rename the column(s)")
+            f"hashes / order lanes (core/exchange.py); rename the column(s)")
 
 
 def take_hashes(cols: Cols, key_names: Sequence[str]
@@ -453,7 +458,7 @@ def take_hashes(cols: Cols, key_names: Sequence[str]
 def strip_hidden(cols: Cols) -> Cols:
     """Drop carried-hash columns before handing a table back to the user."""
     return {k: v for k, v in cols.items()
-            if k not in (H1_NAME, H2_NAME)}
+            if k not in (H1_NAME, H2_NAME, LANES_NAME)}
 
 
 # ===========================================================================

@@ -14,12 +14,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DistTable, HPTMTContext, Table, table_ops
+from repro.core.report import OverflowError, OverflowReport
+
+
+def _spill_mode(spill: object) -> object:
+    """Validate the ``spill=`` tri-state eagerly, naming the bad value."""
+    if spill not in (False, True, "auto"):
+        raise ValueError(
+            f"spill={spill!r}: expected False (in-memory, overflow "
+            f"raises), 'auto' (spill when the budget or an overflow "
+            f"demands it), or True (force the out-of-core path)")
+    return spill
 
 
 class DataFrame:
-    def __init__(self, table: DistTable, ctx: HPTMTContext):
+    """``spill=`` on join/groupby/window/agg-style operators selects the
+    out-of-core path (DESIGN.md §10): ``False`` keeps the all-in-memory
+    behavior (overflow raises), ``"auto"`` pre-checks the input against
+    ``budget_rows`` and — when the in-memory attempt still overflows —
+    retries once through the spill engine, and ``True`` forces spill.
+    Every operator's overflow lands in :attr:`overflow_report`, the one
+    exactness certificate for the whole lineage.
+    """
+
+    def __init__(self, table: DistTable, ctx: HPTMTContext,
+                 report: Optional[OverflowReport] = None):
         self._t = table
         self._ctx = ctx
+        self._report = report if report is not None else OverflowReport()
+
+    @property
+    def overflow_report(self) -> OverflowReport:
+        """Unified overflow accounting across this frame's lineage."""
+        return self._report
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -63,7 +90,8 @@ class DataFrame:
                      columns: Optional[Sequence[str]] = None,
                      predicate=None, capacity: Optional[int] = None,
                      bucket_factor: float = 1.0,
-                     allow_narrowing: bool = False) -> "DataFrame":
+                     allow_narrowing: bool = False,
+                     strict: bool = True) -> "DataFrame":
         """Scan an on-disk dataset (Parquet or native ``.hpt`` — format
         auto-detected) with projection + predicate pushdown.
 
@@ -71,6 +99,10 @@ class DataFrame:
         ``partitioning`` metadata attached when the context matches, so a
         following ``join``/``groupby`` on the partition keys moves no data
         (DESIGN.md §5.3).
+
+        ``strict=False`` records a capacity overflow under
+        ``"scan.capacity"`` in the frame's :attr:`overflow_report`
+        instead of raising — the caller owns the exactness decision.
         """
         from repro.io import read_dataset
 
@@ -78,8 +110,10 @@ class DataFrame:
             path, ctx=ctx, columns=columns, predicate=predicate,
             capacity=capacity, bucket_factor=bucket_factor,
             allow_narrowing=allow_narrowing)
-        cls._check(overflow, "scan")
-        return cls(dt, ctx)
+        if strict:
+            cls._check(overflow, "scan")
+        return cls(dt, ctx,
+                   OverflowReport().add("scan.capacity", overflow))
 
     read_dataset = read_parquet  # format-neutral alias
 
@@ -161,16 +195,16 @@ class DataFrame:
 
     # -- relational operators (eager) ------------------------------------------
     def select(self, predicate: Callable) -> "DataFrame":
-        return DataFrame(table_ops.select(self._t, predicate, ctx=self._ctx),
-                         self._ctx)
+        return self._child(table_ops.select(self._t, predicate,
+                                            ctx=self._ctx))
 
     def project(self, cols: Sequence[str]) -> "DataFrame":
-        return DataFrame(table_ops.project(self._t, cols, ctx=self._ctx),
-                         self._ctx)
+        return self._child(table_ops.project(self._t, cols, ctx=self._ctx))
 
     def join(self, other: "DataFrame", on: Sequence[str], how: str = "inner",
              *, method: str = "auto", max_matches: int = 1,
-             **kw) -> "DataFrame":
+             spill: object = False, budget_rows: Optional[int] = None,
+             spill_workdir: Optional[str] = None, **kw) -> "DataFrame":
         """Equi-join on ``on``; ``how`` is inner/left/right/outer.
 
         ``method`` picks the local join kernel — ``"hash"`` (sort-free
@@ -179,19 +213,68 @@ class DataFrame:
         matches beyond it count as overflow and raise here (DESIGN.md §8).
         Unknown values are rejected eagerly, before any tracing, by
         ``table_ops.join`` with a ValueError naming the offending kwarg.
+
+        ``spill="auto"`` spills to disk when either input exceeds
+        ``n_shards * budget_rows`` rows (or, lacking a budget, when the
+        in-memory attempt overflows); ``spill=True`` forces the
+        out-of-core path (DESIGN.md §10).  Extra keyword arguments apply
+        to the in-memory path only.
         """
+        from repro.spill import should_spill, spill_join
+
+        _spill_mode(spill)
+        budget = budget_rows or max(self._t.capacity, other._t.capacity)
+        ns = self._ctx.n_shards
+
+        def _spilled() -> "DataFrame":
+            return self._from_spill(
+                spill_join(self._t, other._t, on, ctx=self._ctx,
+                           budget_rows=budget, how=how, method=method,
+                           max_matches=max_matches,
+                           max_probes=kw.get("max_probes"),
+                           workdir=spill_workdir), other)
+
+        if spill is True or (spill == "auto" and budget_rows is not None and
+                             (should_spill(len(self), ns, budget_rows) or
+                              should_spill(len(other), ns, budget_rows))):
+            return _spilled()
         out, ov = table_ops.join(self._t, other._t, on, ctx=self._ctx,
                                  how=how, method=method,
                                  max_matches=max_matches, **kw)
+        if int(ov) != 0 and spill == "auto":
+            return _spilled()
         self._check(ov, "join")
-        return DataFrame(out, self._ctx)
+        return self._child(out, other)
 
     def groupby(self, keys: Sequence[str],
-                aggs: Sequence[Tuple[str, str]], **kw) -> "DataFrame":
+                aggs: Sequence[Tuple[str, str]], *,
+                spill: object = False, budget_rows: Optional[int] = None,
+                spill_workdir: Optional[str] = None, **kw) -> "DataFrame":
+        """Hash-aggregate ``aggs`` per distinct ``keys`` combination.
+
+        ``spill="auto"``/``spill=True``/``budget_rows`` select the
+        out-of-core path exactly as in :meth:`join` (DESIGN.md §10).
+        """
+        from repro.spill import should_spill, spill_groupby
+
+        _spill_mode(spill)
+        budget = budget_rows or self._t.capacity
+
+        def _spilled() -> "DataFrame":
+            return self._from_spill(
+                spill_groupby(self._t, keys, aggs, ctx=self._ctx,
+                              budget_rows=budget, workdir=spill_workdir))
+
+        if spill is True or (spill == "auto" and budget_rows is not None and
+                             should_spill(len(self), self._ctx.n_shards,
+                                          budget_rows)):
+            return _spilled()
         out, ov = table_ops.groupby_aggregate(self._t, keys, aggs,
                                               ctx=self._ctx, **kw)
+        if int(ov) != 0 and spill == "auto":
+            return _spilled()
         self._check(ov, "groupby")
-        return DataFrame(out, self._ctx)
+        return self._child(out)
 
     def repartition(self, keys: Sequence[str], mode: str = "hash",
                     ascending=True, **kw) -> "DataFrame":
@@ -218,7 +301,7 @@ class DataFrame:
             return self.sort_values(list(keys), ascending=ascending, **kw)
         out, ov = table_ops.shuffle(self._t, keys, ctx=self._ctx, **kw)
         self._check(ov, "shuffle")
-        return DataFrame(out, self._ctx)
+        return self._child(out)
 
     def sort_values(self, by, ascending=True, **kw) -> "DataFrame":
         """Globally sort by one or more columns (multi-key sample sort;
@@ -226,7 +309,7 @@ class DataFrame:
         out, ov = table_ops.orderby(self._t, by, ctx=self._ctx,
                                     ascending=ascending, **kw)
         self._check(ov, "orderby")
-        return DataFrame(out, self._ctx)
+        return self._child(out)
 
     def window(self, partition_by, order_by, ascending=True) -> "Window":
         """SQL-style window builder: ``df.window(["g"], ["t"]).agg([...],
@@ -239,13 +322,13 @@ class DataFrame:
         out, ov = table_ops.rank(self._t, partition_by, order_by,
                                  ctx=self._ctx, ascending=ascending, **kw)
         self._check(ov, "rank")
-        return DataFrame(out, self._ctx)
+        return self._child(out)
 
     def topk(self, by, k: int, largest: bool = True, **kw) -> "DataFrame":
         """The global top-``k`` rows by ``by`` — per-shard candidates
         tree-reduced over ppermute rounds, no global sort (DESIGN.md §9)."""
-        return DataFrame(table_ops.topk(self._t, by, k, ctx=self._ctx,
-                                        largest=largest, **kw), self._ctx)
+        return self._child(table_ops.topk(self._t, by, k, ctx=self._ctx,
+                                          largest=largest, **kw))
 
     def quantile(self, column: str, qs, method: str = "auto", **kw):
         """Quantiles of ``column`` (numpy ``nanquantile`` semantics).
@@ -263,17 +346,17 @@ class DataFrame:
     def union(self, other: "DataFrame", **kw) -> "DataFrame":
         out, ov = table_ops.union(self._t, other._t, ctx=self._ctx, **kw)
         self._check(ov, "union")
-        return DataFrame(out, self._ctx)
+        return self._child(out, other)
 
     def difference(self, other: "DataFrame", **kw) -> "DataFrame":
         out, ov = table_ops.difference(self._t, other._t, ctx=self._ctx, **kw)
         self._check(ov, "difference")
-        return DataFrame(out, self._ctx)
+        return self._child(out, other)
 
     def intersect(self, other: "DataFrame", **kw) -> "DataFrame":
         out, ov = table_ops.intersect(self._t, other._t, ctx=self._ctx, **kw)
         self._check(ov, "intersect")
-        return DataFrame(out, self._ctx)
+        return self._child(out, other)
 
     def agg(self, column: str, op: str):
         return float(table_ops.aggregate(self._t, column, op, ctx=self._ctx))
@@ -289,12 +372,41 @@ class DataFrame:
         return jnp.stack([jnp.asarray(data[c], jnp.float32) for c in cols],
                          axis=1)
 
+    # -- spill / overflow plumbing ------------------------------------------
+    def _child(self, out: DistTable, *others: "DataFrame") -> "DataFrame":
+        """Wrap an operator result, carrying the lineage's overflow report."""
+        rep = OverflowReport().merge(self._report)
+        for o in others:
+            rep.merge(o._report)
+        return DataFrame(out, self._ctx, rep)
+
+    def _from_spill(self, res, *others: "DataFrame") -> "DataFrame":
+        """Materialize a spilled operator's chunk stream into a DataFrame.
+
+        The spill store is closed (scratch dir removed) before returning;
+        any residual loss in the spill report — e.g. join fan-out beyond
+        ``max_matches``, which is a semantic cap, not a memory one —
+        still raises, exactly as the in-memory path would.
+        """
+        from repro.core.dataflow import _concat_chunks
+
+        with res:
+            chunks = list(res.chunks()) or [res.empty_chunk()]
+            res.report.assert_exact()
+            rep = OverflowReport().merge(self._report)
+            for o in others:
+                rep.merge(o._report)
+            rep.merge(res.report)
+            out = _concat_chunks(chunks, self._ctx)
+        return DataFrame(out, self._ctx, rep)
+
     @staticmethod
     def _check(overflow, op: str) -> None:
         if int(overflow) != 0:
-            raise RuntimeError(
+            raise OverflowError(
                 f"{op}: {int(overflow)} rows overflowed static capacity — "
-                "re-run with a larger out_capacity/bucket_factor")
+                "re-run with a larger out_capacity/bucket_factor, or pass "
+                "spill='auto' to recover out-of-core")
 
 
 class Window:
@@ -307,7 +419,9 @@ class Window:
         self._order_by = order_by
         self._ascending = ascending
 
-    def agg(self, aggs, rows: Optional[int] = None, **kw) -> DataFrame:
+    def agg(self, aggs, rows: Optional[int] = None, *,
+            spill: object = False, budget_rows: Optional[int] = None,
+            spill_workdir: Optional[str] = None, **kw) -> DataFrame:
         """Evaluate window aggregates; returns the DataFrame plus one
         column per agg (rows never move or drop).
 
@@ -319,9 +433,32 @@ class Window:
         with zero additional data movement (DESIGN.md §9); unknown ops,
         columns, offsets and label collisions raise eagerly with the
         offending entry named.
+
+        ``spill="auto"``/``spill=True``/``budget_rows`` select the
+        out-of-core path (DESIGN.md §10): window partitions spill whole
+        to disk and re-enter pre-sorted, so no window is ever truncated
+        by the cross-shard halo.
         """
+        from repro.spill import should_spill, spill_window
+
+        df = self._df
+        _spill_mode(spill)
+        budget = budget_rows or df._t.capacity
+
+        def _spilled() -> DataFrame:
+            return df._from_spill(spill_window(
+                df._t, self._partition_by, self._order_by, aggs,
+                ctx=df._ctx, budget_rows=budget, rows=rows,
+                ascending=self._ascending, workdir=spill_workdir))
+
+        if spill is True or (spill == "auto" and budget_rows is not None and
+                             should_spill(len(df), df._ctx.n_shards,
+                                          budget_rows)):
+            return _spilled()
         out, ov = table_ops.window_aggregate(
-            self._df._t, self._partition_by, self._order_by, aggs,
-            ctx=self._df._ctx, rows=rows, ascending=self._ascending, **kw)
+            df._t, self._partition_by, self._order_by, aggs,
+            ctx=df._ctx, rows=rows, ascending=self._ascending, **kw)
+        if int(ov) != 0 and spill == "auto":
+            return _spilled()
         DataFrame._check(ov, "window")
-        return DataFrame(out, self._df._ctx)
+        return df._child(out)

@@ -27,6 +27,7 @@ from __future__ import annotations
 import json
 import os
 import struct
+import zlib
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,6 +37,18 @@ from .schema import Schema
 MAGIC = b"HPT1"
 
 Stats = Optional[Tuple[float, float]]
+
+
+class HptIntegrityError(ValueError):
+    """A ``.hpt`` file is truncated or corrupted.
+
+    Raised instead of decoding garbage when the container fails its
+    structural checks (magic, header length, buffer extents) or a column
+    buffer's recorded CRC32 does not match the bytes on disk.  The message
+    names the file and the failing check; the usual causes are an
+    interrupted copy or a torn spill run — delete the file and regenerate
+    it (spill runs are recomputed from their source on retry).
+    """
 
 
 def column_stats(arr: np.ndarray) -> Stats:
@@ -70,11 +83,12 @@ def write_hpt(path: str, cols: Dict[str, np.ndarray],
     if num_rows > n:
         raise ValueError(f"num_rows {num_rows} exceeds column length {n}")
 
-    offsets, stats, bufs, pos = {}, {}, [], 0
+    offsets, stats, crcs, bufs, pos = {}, {}, {}, [], 0
     for name in schema.names:
         valid = np.ascontiguousarray(cols[name][:num_rows])
         buf = valid.tobytes()
         offsets[name] = [pos, len(buf)]
+        crcs[name] = zlib.crc32(buf) & 0xFFFFFFFF
         stats[name] = None
         s = column_stats(valid)
         if s is not None:
@@ -83,7 +97,7 @@ def write_hpt(path: str, cols: Dict[str, np.ndarray],
         pos += len(buf)
 
     header = {"num_rows": int(num_rows), "schema": schema.to_json(),
-              "stats": stats, "offsets": offsets}
+              "stats": stats, "offsets": offsets, "crc32": crcs}
     hjson = json.dumps(header).encode()
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -101,9 +115,24 @@ def read_hpt_header(path: str) -> dict:
     with open(path, "rb") as f:
         magic = f.read(4)
         if magic != MAGIC:
-            raise ValueError(f"{path}: not an .hpt file (magic {magic!r})")
-        (hlen,) = struct.unpack("<I", f.read(4))
-        return json.loads(f.read(hlen).decode())
+            raise HptIntegrityError(
+                f"{path}: not an .hpt file or truncated before the magic "
+                f"(read {magic!r}, want {MAGIC!r})")
+        raw_len = f.read(4)
+        if len(raw_len) < 4:
+            raise HptIntegrityError(
+                f"{path}: truncated inside the header-length field")
+        (hlen,) = struct.unpack("<I", raw_len)
+        hjson = f.read(hlen)
+        if len(hjson) < hlen:
+            raise HptIntegrityError(
+                f"{path}: truncated inside the JSON header (have "
+                f"{len(hjson)} of {hlen} bytes)")
+        try:
+            return json.loads(hjson.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise HptIntegrityError(
+                f"{path}: corrupted JSON header ({e})") from e
 
 
 def read_hpt(path: str, columns: Optional[Sequence[str]] = None,
@@ -121,6 +150,7 @@ def read_hpt(path: str, columns: Optional[Sequence[str]] = None,
     if missing:
         raise KeyError(f"{path}: columns {missing} not in schema "
                        f"{list(schema.names)}")
+    crcs = header.get("crc32", {})  # absent in pre-checksum files
     with open(path, "rb") as f:
         f.seek(4)
         (hlen,) = struct.unpack("<I", f.read(4))
@@ -131,6 +161,16 @@ def read_hpt(path: str, columns: Optional[Sequence[str]] = None,
             start, nbytes = header["offsets"][name]
             f.seek(data_start + start)
             raw = f.read(nbytes)
+            if len(raw) < nbytes:
+                raise HptIntegrityError(
+                    f"{path}: column {name!r} truncated (have {len(raw)} "
+                    f"of {nbytes} bytes) — the file was cut short while "
+                    f"being written or copied")
+            if name in crcs and (zlib.crc32(raw) & 0xFFFFFFFF) != crcs[name]:
+                raise HptIntegrityError(
+                    f"{path}: column {name!r} failed its CRC32 check — "
+                    f"the data bytes do not match what the writer "
+                    f"recorded; regenerate the file")
             arr = np.frombuffer(raw, dtype=field.np_dtype)
             out[name] = arr.reshape((n,) + field.trailing).copy()
     return out, n

@@ -112,6 +112,14 @@ class ScanStats:
     rows_selected: int = 0     # after the residual predicate
     rows_overflowed: int = 0   # dropped by the §2 capacity contract
 
+    def as_report(self):
+        """This scan's overflow as an :class:`~repro.core.report.OverflowReport`
+        under the ``"scan.capacity"`` label — mergeable into a
+        DataFrame/TSet lineage report (DESIGN.md §10)."""
+        from repro.core.report import OverflowReport
+
+        return OverflowReport().add("scan.capacity", self.rows_overflowed)
+
 
 class ScanSource:
     """Plan + execute a sharded, pushdown-aware scan of a dataset."""

@@ -1,0 +1,26 @@
+"""Out-of-core spill subsystem (DESIGN.md §10).
+
+Turns the §2 overflow contract's *counted loss* into *recovery*: inputs
+bigger than the mesh's planned capacity are hash-partitioned into on-disk
+``.hpt`` runs and streamed partition-by-partition through the unchanged
+in-memory operators under a bounded per-step memory budget — bit-exact
+against the all-in-memory oracle, with the run format carrying the row
+hashes and order lanes so re-ingested partitions trigger the shuffle- and
+sort-elision paths (zero redundant AllToAll on re-entry).
+
+  hashing.py   bit-identical numpy mirrors of the device hash / lanes
+  store.py     run-file store, atomic writes, fault injection
+  engine.py    spill_join / spill_groupby / spill_window + SpillResult
+"""
+from .engine import (SpillResult, SpillStats, iter_host_chunks,
+                     plan_partitions, should_spill, spill_groupby,
+                     spill_join, spill_window)
+from .store import (FAULT_ENV, SpillError, SpillStore, SpillWriteError,
+                    reset_fault_injection)
+
+__all__ = [
+    "SpillResult", "SpillStats", "iter_host_chunks", "plan_partitions",
+    "should_spill", "spill_groupby", "spill_join", "spill_window",
+    "FAULT_ENV", "SpillError", "SpillStore", "SpillWriteError",
+    "reset_fault_injection",
+]

@@ -1,0 +1,217 @@
+"""On-disk run store for the spill engine (DESIGN.md §10).
+
+A :class:`SpillStore` owns one scratch directory of ``.hpt`` run files.
+Runs are keyed by ``(tag, partition, shard)`` — ``tag`` names the operand
+("left", "right", "in", "out"), ``partition`` is the spill partition a
+row's key hashed to, ``shard`` the mesh shard it will re-enter on — and a
+key may accumulate several sequence-numbered files (one per ingested
+chunk), since the ``.hpt`` container is write-once.
+
+Durability contract: every run goes through ``io.native.write_hpt``'s
+atomic tmp-write + rename, and carries the container's per-column CRC32,
+so a reader can never decode a torn run — interrupted writes either leave
+a ``*.tmp`` that :meth:`SpillStore.close` / the engine's error path
+removes, or raise :class:`~repro.io.native.HptIntegrityError` at read.
+
+Fault injection: the ``HPTMT_SPILL_FAULT`` env knob (``"<point>:<n>"``)
+makes the ``n``-th run write fail — ``disk_full`` raises ``ENOSPC``
+before any byte lands; ``partial_write`` tears the tmp file mid-write and
+then fails, simulating a crash.  Both surface as the named
+:class:`SpillWriteError` with the tmp file cleaned up, and the injector
+disarms after firing so a retry under the same environment succeeds —
+exactly the story the fault tests assert.
+"""
+from __future__ import annotations
+
+import errno
+import os
+import shutil
+import tempfile
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.io.native import read_hpt, write_hpt
+
+FAULT_ENV = "HPTMT_SPILL_FAULT"
+FAULT_POINTS = ("disk_full", "partial_write")
+
+
+class SpillError(RuntimeError):
+    """Base class for spill-engine failures."""
+
+
+class SpillWriteError(SpillError):
+    """A spill run could not be written (disk full / interrupted write).
+
+    The failed run's temp file has already been cleaned up; retrying the
+    operation recomputes the run from its in-memory source.
+    """
+
+
+# one-shot injector state: {"spec": armed env value, "remaining": countdown}
+# — "fired" is remembered per spec so a retry under the same env succeeds
+_fault: Dict[str, object] = {"spec": None, "remaining": None}
+
+
+def reset_fault_injection() -> None:
+    """Re-arm the fault injector from the current environment (tests)."""
+    _fault["spec"] = None
+    _fault["remaining"] = None
+
+
+def _parse_fault(spec: str) -> Tuple[str, int]:
+    point, _, count = spec.partition(":")
+    if point not in FAULT_POINTS:
+        raise ValueError(
+            f"{FAULT_ENV}={spec!r}: unknown fault point {point!r}; "
+            f"expected one of {FAULT_POINTS}")
+    return point, int(count) if count else 1
+
+
+def _check_fault(path: str) -> None:
+    """Fire the armed fault (once) at this run-write site."""
+    spec = os.environ.get(FAULT_ENV)
+    if not spec:
+        return
+    if _fault["spec"] != spec:  # env changed since last arm → re-arm
+        point, n = _parse_fault(spec)
+        _fault["spec"] = spec
+        _fault["remaining"] = n
+    if _fault["remaining"] is None or _fault["remaining"] <= 0:
+        return  # already fired for this spec — retries succeed
+    _fault["remaining"] -= 1
+    if _fault["remaining"] > 0:
+        return
+    point, _ = _parse_fault(spec)
+    _fault["remaining"] = 0  # disarm
+    if point == "disk_full":
+        raise OSError(errno.ENOSPC, "injected disk-full", path)
+    # partial_write: tear a half-written tmp file, then die mid-write
+    with open(path + ".tmp", "wb") as f:
+        f.write(b"HPT1\x00")
+    raise OSError(errno.EIO, "injected partial write", path)
+
+
+class SpillStore:
+    """A directory of spill runs with an in-memory index.
+
+    Usable as a context manager; ``close()`` removes the whole scratch
+    tree (runs, temp files and all), so no spill artifact outlives the
+    operation that created it unless the caller opts into ``keep=True``.
+    """
+
+    def __init__(self, workdir: Optional[str] = None, *, keep: bool = False):
+        if workdir is None:
+            self.root = tempfile.mkdtemp(prefix="hptmt-spill-")
+            self._owns_root = True
+        else:
+            os.makedirs(workdir, exist_ok=True)
+            self.root = workdir
+            self._owns_root = False
+        self.keep = keep
+        # (tag, q, s) -> list of (path, rows)
+        self._runs: Dict[Tuple[str, int, int], List[Tuple[str, int]]] = {}
+        self._seq = 0
+        self.bytes_written = 0
+        self.closed = False
+
+    # -- writing -----------------------------------------------------------
+    def write_run(self, tag: str, q: int, s: int,
+                  cols: Dict[str, np.ndarray], num_rows: int) -> str:
+        """Write one run file atomically; returns its path.
+
+        Injected or real OS-level write failures are converted to the
+        named :class:`SpillWriteError` after removing the temp file, so a
+        failed spill never leaves a half-written run behind.
+        """
+        path = os.path.join(
+            self.root, f"{tag}-q{q:05d}-s{s:03d}-{self._seq:05d}.hpt")
+        self._seq += 1
+        try:
+            _check_fault(path)
+            header = write_hpt(path, cols, num_rows)
+        except OSError as e:
+            for leftover in (path + ".tmp", path):
+                try:
+                    os.remove(leftover)
+                except OSError:
+                    pass
+            raise SpillWriteError(
+                f"spill run {os.path.basename(path)} failed to write "
+                f"({e.strerror or e}); scratch dir {self.root} — free disk "
+                f"space or point the spill workdir elsewhere and retry"
+            ) from e
+        nbytes = sum(n for _, n in header["offsets"].values())
+        self.bytes_written += nbytes
+        self._runs.setdefault((tag, q, s), []).append((path, int(num_rows)))
+        return path
+
+    # -- reading -----------------------------------------------------------
+    def partitions(self, tag: str) -> List[int]:
+        return sorted({q for (t, q, _s) in self._runs if t == tag})
+
+    def shards(self, tag: str, q: int) -> List[int]:
+        return sorted({s for (t, qq, s) in self._runs if t == tag and qq == q})
+
+    def rows(self, tag: str, q: int, s: Optional[int] = None) -> int:
+        return sum(n for (t, qq, ss), runs in self._runs.items()
+                   if t == tag and qq == q and (s is None or ss == s)
+                   for _, n in runs)
+
+    def read_partition(self, tag: str, q: int, s: Optional[int] = None
+                       ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Concatenate the runs of one partition (optionally one shard)."""
+        keys = sorted(k for k in self._runs
+                      if k[0] == tag and k[1] == q and (s is None or k[2] == s))
+        pieces: List[Dict[str, np.ndarray]] = []
+        total = 0
+        for key in keys:
+            for path, n in self._runs[key]:
+                cols, nn = read_hpt(path)
+                pieces.append(cols)
+                total += nn
+        if not pieces:
+            return {}, 0
+        names = list(pieces[0])
+        return {k: np.concatenate([p[k] for p in pieces], axis=0)
+                for k in names}, total
+
+    def iter_runs(self, tag: str, q: int, s: Optional[int] = None
+                  ) -> Iterator[Tuple[Dict[str, np.ndarray], int]]:
+        """Stream one partition's runs file-by-file (bounded memory)."""
+        keys = sorted(k for k in self._runs
+                      if k[0] == tag and k[1] == q and (s is None or k[2] == s))
+        for key in keys:
+            for path, _ in self._runs[key]:
+                yield read_hpt(path)
+
+    def drop_partition(self, tag: str, q: int) -> None:
+        """Delete a partition's runs once consumed (keeps disk bounded)."""
+        for key in [k for k in self._runs if k[0] == tag and k[1] == q]:
+            for path, _ in self._runs.pop(key):
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+
+    # -- lifecycle ---------------------------------------------------------
+    def leftover_temp_files(self) -> List[str]:
+        """Any ``*.tmp`` files in the scratch tree (should always be [])."""
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(p for p in os.listdir(self.root) if p.endswith(".tmp"))
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        self._runs.clear()
+        if not self.keep and (self._owns_root or os.path.isdir(self.root)):
+            shutil.rmtree(self.root, ignore_errors=True)
+
+    def __enter__(self) -> "SpillStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
