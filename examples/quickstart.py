@@ -10,6 +10,9 @@ is scanned back with projection + predicate pushdown, joined, aggregated,
 and bridged to arrays — write → scan → join → groupby → ``to_jax()``.
 Part 6 runs a join whose working set exceeds its memory budget through
 the out-of-core spill path (DESIGN.md §10) — same API, ``spill="auto"``.
+Part 7 plans the same kind of pipeline lazily (DESIGN.md §11): the
+rewriter pushes the filter and projection into the scan and ``explain()``
+shows the plan before and after optimization.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -145,6 +148,28 @@ def main():
     print(f"out-of-core join: {len(enriched)} rows at a 4096-row budget "
           f"({rep.total_recovered} rows spill-recovered); "
           f"exact={rep.is_exact()}")
+
+    # --- 7. the lazy planner: whole-pipeline optimization (§11) ------------
+    # The same scan→filter→groupby→orderby chain as the eager parts, but
+    # nothing runs until collect(): the rewriter pushes the predicate and
+    # the projection into the scan (fragment pruning + narrowed reads) and
+    # picks a range layout for the groupby so the final sort is local.
+    from repro.plan import LazyFrame
+
+    with tempfile.TemporaryDirectory() as root:
+        make_events_dataset(root, n_rows=20_000, n_users=200, seed=2)
+        lazy = (LazyFrame.read_parquet(os.path.join(root, "events"), ctx)
+                .filter([pred("day", "<", 7)])
+                .groupby(["user_id"], [("value", "sum")])
+                .sort_values("user_id"))
+        print("-- plan before optimization --")
+        print("\n".join(lazy.explain(optimized=False)
+                        .splitlines()[:6]))      # the naive logical tree
+        print("-- plan after optimization --")
+        print(lazy.explain())                    # rewrites + strategies
+        daily = lazy.collect()                   # ONE traced program
+        print(f"planned pipeline: {len(daily)} rows, "
+              f"exact={daily.overflow_report.is_exact()}")
     print("quickstart OK")
 
 

@@ -166,6 +166,23 @@ class TSet:
         chunks = _execute(self._node, self._ctx, report)
         return _concat_chunks(chunks, self._ctx)
 
+    def lazy(self, name: str = "tset"):
+        """Bridge into the query planner (repro.plan, DESIGN.md §11).
+
+        Materializes this TSet's streaming graph (a barrier, exactly like
+        :meth:`collect` — chunk layouts survive concatenation) and roots
+        a :class:`~repro.plan.LazyFrame` at the result, so downstream
+        relational chains get whole-pipeline exchange optimization the
+        chunk-wise executor cannot see.  The materialization's overflow
+        report is carried into the lazy lineage.
+        """
+        from repro.plan import LazyFrame
+        from repro.plan.logical import source
+
+        dt = self.collect()
+        return LazyFrame(source(dt, name), self._ctx,
+                         OverflowReport().merge(self._last_report))
+
     def reduce(self, column: str, op: str):
         """Streaming scalar aggregate (per-chunk partials, merged)."""
         self._last_report = report = OverflowReport()

@@ -277,6 +277,46 @@ def orderby(dt: DistTable, by, *, ctx: HPTMTContext,
     return DistTable(cols, counts, part), overflow
 
 
+def _local_sort_impl(cols: Cols, counts: jnp.ndarray, *, keys, ascending,
+                     axis):
+    local_cols, count = _local_parts(cols, counts)
+    capacity = next(iter(local_cols.values())).shape[0]
+    mask = _mask_for(count, capacity)
+    order = lex_order(order_lanes(local_cols, keys, ascending), mask)
+    return {k: v[order] for k, v in local_cols.items()}, count[None]
+
+
+@operator("table.local_sort", Abstraction.TABLE)
+def local_sort(dt: DistTable, by, *, ctx: HPTMTContext, ascending=True,
+               partitioning: object = "auto"
+               ) -> Tuple[DistTable, jnp.ndarray]:
+    """Sort rows *within each shard* — a planner primitive, ZERO AllToAll.
+
+    Rows never cross shards, so this is NOT a global sort on its own: the
+    query planner (``repro.plan``) emits it when placement metadata already
+    proves the cross-shard half of an ordering (e.g. shards hold disjoint
+    contiguous key ranges after a range exchange upstream, so a local sort
+    completes a global ``orderby``), or when only per-shard order matters
+    (window evaluation over hash-co-located partitions).
+
+    ``partitioning`` stamps the output metadata: ``"auto"`` keeps a hash
+    layout (rows did not move) and drops anything else; an explicit value
+    is trusted verbatim — callers must pass a layout they can prove.
+    Same NaN-last key semantics as ``orderby`` (DESIGN.md §9).
+    """
+    keys, asc = _normalize_order(by, ascending, dt.column_names, "by")
+    if partitioning == "auto":
+        part = dt.partitioning if partitioning_kind(dt.partitioning) \
+            == "hash" else None
+    else:
+        part = partitioning
+    impl = functools.partial(_local_sort_impl, keys=keys, ascending=asc)
+    cols, counts = _run_sharded(
+        ctx, impl, (dt.columns, dt.counts),
+        out_specs=(P(ctx.data_axis), P(ctx.data_axis)))
+    return DistTable(cols, counts, part), jnp.zeros((), jnp.int32)
+
+
 # ===========================================================================
 # Windowed aggregation / rank / top-k / quantile (DESIGN.md §9)
 # ===========================================================================

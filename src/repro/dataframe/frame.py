@@ -361,6 +361,22 @@ class DataFrame:
     def agg(self, column: str, op: str):
         return float(table_ops.aggregate(self._t, column, op, ctx=self._ctx))
 
+    # -- lazy planning (repro.plan, DESIGN.md §11) ---------------------------
+    def lazy(self, name: str = "table"):
+        """Start a lazy expression graph rooted at this frame's table.
+
+        Chained operators on the returned :class:`~repro.plan.LazyFrame`
+        only build a logical plan; ``.collect()`` optimizes it
+        (predicate/projection pushdown, chained exchange elision, join
+        reordering, global layout choice) and runs the whole pipeline as
+        ONE traced program — bit-exact vs the eager chain, never more
+        collectives.  ``.explain()`` shows the plan without running it.
+        """
+        from repro.plan import LazyFrame
+        from repro.plan.logical import source
+
+        return LazyFrame(source(self._t, name), self._ctx, self._report)
+
     # -- interop bridges ----------------------------------------------------
     def to_numpy(self) -> Dict[str, np.ndarray]:
         return self._t.to_numpy()

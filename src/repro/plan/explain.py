@@ -1,0 +1,99 @@
+"""Stable text rendering of logical / optimized / physical plans.
+
+The output is deterministic for a given (plan, context): node payloads
+render through explicit per-kind formatters (never ``repr`` of objects
+with memory addresses — callables render as ``<fn>``, datasets by their
+fragment/column counts), so tests can assert exact substrings and two
+renders of the same plan compare equal (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .logical import LogicalNode
+
+
+def _fmt_preds(preds) -> str:
+    if callable(preds):
+        return "<fn>"
+    return " AND ".join(f"{p.column}{p.op}{p.value!r}" for p in preds)
+
+
+def _fmt_asc(keys, asc) -> str:
+    return ",".join(k if a else f"{k}:desc" for k, a in zip(keys, asc))
+
+
+def _describe(node: LogicalNode) -> str:
+    p = node.payload
+    k = node.kind
+    if k == "source":
+        return f"source[{p['name']}: {','.join(node.schema)}]"
+    if k == "scan":
+        ds = p["dataset"]
+        s = f"scan[{len(ds.fragments)} fragments, cols={','.join(p['columns'])}"
+        if p["predicate"]:
+            s += f", predicate={_fmt_preds(p['predicate'])}"
+        return s + "]"
+    if k == "filter":
+        return f"filter[{_fmt_preds(p['predicate'])}]"
+    if k == "project":
+        return f"project[{','.join(p['columns'])}]"
+    if k == "join":
+        s = f"join[{p['how']} on={','.join(p['keys'])}"
+        if p["swap"]:
+            s += ", swapped"
+        return s + "]"
+    if k == "groupby":
+        aggs = ",".join(f"{c}_{op}" for c, op in p["aggs"])
+        s = f"groupby[keys={','.join(p['keys'])} aggs={aggs}"
+        if p["layout"] != "hash":
+            s += f", layout={p['layout']}"
+        return s + "]"
+    if k == "orderby":
+        return f"orderby[{_fmt_asc(p['by'], p['ascending'])}]"
+    if k == "window":
+        aggs = ",".join(f"{c}:{op}" if c else op
+                        for c, op, *_ in p["aggs"])
+        rows = p["rows"] if p["rows"] is not None else "cumulative"
+        return (f"window[partition={','.join(p['partition_by'])} "
+                f"order={_fmt_asc(p['order_by'], p['ascending'])} "
+                f"aggs={aggs} rows={rows}]")
+    if k == "topk":
+        return f"topk[{_fmt_asc(p['by'], p['ascending'])} k={p['k']}]"
+    if k == "repartition":
+        return f"repartition[{p['mode']} keys={','.join(p['keys'])}]"
+    return k  # pragma: no cover — exhaustive over node kinds
+
+
+def render_tree(root: LogicalNode) -> str:
+    lines: List[str] = []
+
+    def walk(node: LogicalNode, depth: int) -> None:
+        lines.append("  " * depth + _describe(node))
+        for inp in node.inputs:
+            walk(inp, depth + 1)
+
+    walk(root, 0)
+    return "\n".join(lines)
+
+
+def render_physical(plan) -> str:
+    lines = []
+    for s in plan.steps:
+        det = f"  -- {s.detail}" if s.detail else ""
+        lines.append(f"  {s.index:2d}. {s.op:<12} {s.strategy:<24} "
+                     f"all_to_all={s.a2a}{det}")
+    lines.append(f"  predicted collectives: {plan.predicted_collectives} "
+                 f"all_to_all on {plan.ctx.n_shards} shards "
+                 f"(output layout: {plan.out_layout.describe()})")
+    return "\n".join(lines)
+
+
+def render_explain(logical_root: LogicalNode, optimized_root: LogicalNode,
+                   fired, plan) -> str:
+    parts = ["== logical plan ==", render_tree(logical_root),
+             "== rewrites =="]
+    parts.append("  " + (", ".join(fired) if fired else "(none fired)"))
+    parts += ["== optimized plan ==", render_tree(optimized_root),
+              "== physical plan ==", render_physical(plan)]
+    return "\n".join(parts)
