@@ -76,13 +76,24 @@ class LazyFrame:
 
     def join(self, other: "LazyFrame", on, how: str = "inner", *,
              method: str = "auto", max_matches: int = 1,
-             **kw) -> "LazyFrame":
+             reorder: bool = False, **kw) -> "LazyFrame":
+        """Deferred equi-join (same semantics as the eager ``join``).
+
+        ``reorder=True`` lets the optimizer swap the inputs so the
+        smaller estimated side becomes the hash build side (rule
+        ``reorder-join-inputs``).  Off by default: ``table_ops.join``
+        caps fan-out per LEFT row, so swapping changes which side
+        ``max_matches`` caps and overflow accounting could diverge from
+        the eager oracle — opt in only when the cap cannot bind (e.g.
+        ``max_matches`` exceeds any true key fan-out on either side).
+        """
         if not isinstance(other, LazyFrame):
             raise TypeError(f"join expects a LazyFrame (got "
                             f"{type(other).__name__}); call .lazy() first")
         return self._chain(
             L.join(self._node, other._node, on, how=how,
-                   max_matches=max_matches, method=method, **kw), other)
+                   max_matches=max_matches, method=method,
+                   reorder=reorder, **kw), other)
 
     def groupby(self, keys, aggs, **kw) -> "LazyFrame":
         return self._chain(L.groupby(self._node, keys, aggs, **kw))

@@ -18,7 +18,7 @@ Node kinds and payloads:
   filter       predicate — a tuple of ColumnPredicate (AND), or a
                callable ``cols -> bool mask`` (opaque to the rewriter)
   project      columns
-  join         keys, how, method, max_matches, swap, kw
+  join         keys, how, method, max_matches, swap, reorder, kw
   groupby      keys, aggs, layout ("hash" | "range"), layout_ascending, kw
   orderby      by, ascending
   window       partition_by, order_by, ascending, aggs, rows
@@ -127,7 +127,10 @@ def join_schema(left_schema, right_schema, keys) -> Tuple[str, ...]:
 
 def join(left: LogicalNode, right: LogicalNode, keys, *,
          how: str = "inner", max_matches: int = 1, method: str = "auto",
-         **kw) -> LogicalNode:
+         reorder: bool = False, **kw) -> LogicalNode:
+    """``reorder=True`` opts this join into the ``reorder-join-inputs``
+    rewrite (the caller promises ``max_matches`` cannot bind — see
+    ``plan.rules``); ``swap`` is the rewriter's decision output."""
     keys = tuple(keys)
     if how not in _JOIN_HOWS:
         raise ValueError(f"unknown join type how={how!r}; "
@@ -137,7 +140,8 @@ def join(left: LogicalNode, right: LogicalNode, keys, *,
     return LogicalNode(
         "join", (left, right),
         {"keys": keys, "how": how, "max_matches": max_matches,
-         "method": method, "swap": False, "kw": dict(kw)},
+         "method": method, "swap": False, "reorder": bool(reorder),
+         "kw": dict(kw)},
         join_schema(left.schema, right.schema, keys))
 
 

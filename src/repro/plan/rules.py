@@ -21,10 +21,20 @@ decisions the physical planner exploits:
                                 by ``ScanSource.read_columns``)
   drop-redundant-exchange       a user ``repartition`` whose layout is
                                 immediately destroyed by a re-exchanging
-                                consumer is dead work
+                                consumer is dead work (never fired before
+                                ``topk``: its tie selection and its
+                                ``k <= capacity`` validation are
+                                placement-sensitive)
   reorder-join-inputs           inner joins put the smaller estimated
                                 side on the right — the hash build side
-                                (manifest min/max cardinality estimates)
+                                (manifest min/max cardinality estimates).
+                                Opt-in per join (``join(..., reorder=
+                                True)``): ``table_ops.join`` caps fan-out
+                                per LEFT row, so swapping sides changes
+                                which side ``max_matches`` caps and
+                                overflow accounting could diverge from
+                                the eager oracle unless the caller knows
+                                the cap cannot bind
   choose-range-layout           groupby feeding an orderby on the same
                                 keys exchanges by RANGE once instead of
                                 hash + range twice
@@ -216,18 +226,20 @@ def _serves(rep: LogicalNode, consumer: LogicalNode, side: int) -> bool:
         full = tuple(pk) + tuple(consumer.payload["order_by"])
         return (set(keys) == set(pk)
                 or (mode == "range" and keys == full))
-    if k in ("repartition", "topk"):
-        # repartition: immediately re-exchanged; topk: the ppermute
-        # tree-reduce never looks at placement
-        return False
-    return True  # anything else: layout flows through, keep it
+    if k == "repartition":
+        return False  # immediately re-exchanged by the consumer
+    # anything else (incl. topk: tie selection is per-shard and
+    # ``k <= capacity`` validation is per-shard too, so placement — and
+    # the rebalanced capacity a repartition brings — is observable):
+    # layout flows through, keep it
+    return True
 
 
 def _drop_dead_repartition(node: LogicalNode,
                            fired: List[str]) -> LogicalNode:
     """Drop a repartition child whose layout this node destroys unused."""
     if node.kind not in ("join", "groupby", "orderby", "window",
-                         "repartition", "topk"):
+                         "repartition"):
         return node
     new_inputs, changed = [], False
     for i, inp in enumerate(node.inputs):
@@ -294,7 +306,13 @@ def _push_projection(node: LogicalNode, req: Set[str],
                 continue
             if c in lsch and c not in keys:
                 lreq.add(c)
-            if c.endswith("_r") and c[:-2] in rsch and c[:-2] in lsch:
+            # join-generated dup suffix requires right's base column —
+            # but join_schema never suffixes KEYS, so "k_r" with k a
+            # join key can only be a literal input column (same guard
+            # as _push_filter's `generated` test): fall through to the
+            # plain rsch handling so the literal column stays required
+            if c.endswith("_r") and c[:-2] in rsch and c[:-2] in lsch \
+                    and c[:-2] not in keys:
                 rreq.add(c[:-2])
             elif c in rsch and c not in lsch and c not in keys:
                 rreq.add(c)
@@ -320,8 +338,14 @@ def _push_projection(node: LogicalNode, req: Set[str],
 def _reorder_joins(node: LogicalNode, fired: List[str]) -> LogicalNode:
     node = node.with_inputs(*[_reorder_joins(i, fired)
                               for i in node.inputs])
+    # opt-in only: the local kernels cap fan-out per PROBE (left) row,
+    # so a swap silently moves the max_matches cap to the other side —
+    # a 1:N join whose fan-out exceeds the cap on the swapped-to-left
+    # side would overflow where the eager oracle is exact (or vice
+    # versa).  ``reorder=True`` is the caller's promise the cap cannot
+    # bind either way.
     if node.kind != "join" or node.payload["how"] != "inner" \
-            or node.payload["swap"]:
+            or node.payload["swap"] or not node.payload["reorder"]:
         return node
     left, right = node.inputs
     if not (estimated_rows(left) < estimated_rows(right)):

@@ -167,6 +167,13 @@ def test_drop_redundant_exchange():
     root_k, fired_k = optimize(keep.logical_plan)
     assert "drop-redundant-exchange" not in fired_k
     assert any(n.kind == "repartition" for n in logical.walk(root_k))
+    # repartition feeding topk is NOT dead: topk's tie selection and its
+    # k <= per-shard-capacity validation are placement-sensitive, so the
+    # user's exchange stays
+    kt = bf.lazy().repartition(["k1"]).topk(["v"], 7)
+    root_t, fired_t = optimize(kt.logical_plan)
+    assert "drop-redundant-exchange" not in fired_t
+    assert any(n.kind == "repartition" for n in logical.walk(root_t))
 
 
 def test_reorder_join_inputs_and_collision_guard():
@@ -177,18 +184,56 @@ def test_reorder_join_inputs_and_collision_guard():
     wide = DataFrame.from_dict(
         {"k": (np.arange(40) % 4).astype(np.float32),
          "x": np.arange(40, dtype=np.float32)}, ctx, bucket_factor=4.0)
-    lf = tiny.lazy().join(wide.lazy(), ["k"], max_matches=16)
+    lf = tiny.lazy().join(wide.lazy(), ["k"], max_matches=16,
+                          reorder=True)
     root, fired = optimize(lf.logical_plan)
     assert "reorder-join-inputs" in fired and root.payload["swap"]
     assert "swapped" in lf.explain()
+    # without the opt-in the rule never fires, even for this shape:
+    # swapping moves the per-left-row max_matches cap to the other side
+    lf0 = tiny.lazy().join(wide.lazy(), ["k"], max_matches=16)
+    root0, fired0 = optimize(lf0.logical_plan)
+    assert "reorder-join-inputs" not in fired0 and not root0.payload["swap"]
     # a literal `x_r` column would collide with the swap's rename
     tiny_r = DataFrame.from_dict(
         {"k": np.arange(4, dtype=np.float32),
          "x": np.arange(4, dtype=np.float32),
          "x_r": np.arange(4, dtype=np.float32)}, ctx, bucket_factor=4.0)
-    lf2 = tiny_r.lazy().join(wide.lazy(), ["k"], max_matches=16)
+    lf2 = tiny_r.lazy().join(wide.lazy(), ["k"], max_matches=16,
+                             reorder=True)
     root2, fired2 = optimize(lf2.logical_plan)
     assert "reorder-join-inputs" not in fired2 and not root2.payload["swap"]
+
+
+def test_reorder_opt_in_guards_max_matches_cap():
+    """The REVIEW regression: table_ops.join caps fan-out per LEFT row,
+    so a swap silently caps the OTHER side.  Here the eager orientation
+    is exact at max_matches=1 (each left row matches one right row) but
+    the swapped orientation overflows (8 left rows share key 0) — the
+    rule must stay off by default, and opting in surfaces the overflow
+    instead of silently dropping matches."""
+    ctx = local_context()
+    left = DataFrame.from_dict(
+        {"k": np.zeros(8, np.float32),
+         "v": np.arange(8, dtype=np.float32)}, ctx, bucket_factor=4.0)
+    right = DataFrame.from_dict(
+        {"k": np.arange(20, dtype=np.float32),
+         "w": 50.0 + np.arange(20, dtype=np.float32)}, ctx,
+        bucket_factor=4.0)
+    lf = left.lazy().join(right.lazy(), ["k"], max_matches=1)
+    root, fired = optimize(lf.logical_plan)
+    # estimates favor swapping (8 < 20 rows) yet the rule must not fire
+    assert "reorder-join-inputs" not in fired and not root.payload["swap"]
+    _assert_same_rows(lf.collect().to_numpy(),
+                      left.join(right, ["k"], max_matches=1).to_numpy())
+    # with the opt-in the cap binds on the swapped side: strict collect
+    # reports it as overflow rather than dropping matches silently
+    opt = left.lazy().join(right.lazy(), ["k"], max_matches=1,
+                           reorder=True)
+    _, fired_o = optimize(opt.logical_plan)
+    assert "reorder-join-inputs" in fired_o
+    with pytest.raises(OverflowError):
+        opt.collect()
 
 
 def test_choose_range_layout():
@@ -350,11 +395,40 @@ def test_parity_swapped_join_with_duplicate_columns():
     wide = DataFrame.from_dict(
         {"k": (np.arange(40) % 4).astype(np.float32),
          "x": np.arange(40, dtype=np.float32)}, ctx, bucket_factor=4.0)
-    lf = tiny.lazy().join(wide.lazy(), ["k"], max_matches=16)
+    lf = tiny.lazy().join(wide.lazy(), ["k"], max_matches=16,
+                          reorder=True)
     _, fired = optimize(lf.logical_plan)
     assert "reorder-join-inputs" in fired  # the swap path really runs
     _assert_same_rows(lf.collect().to_numpy(),
                       tiny.join(wide, ["k"], max_matches=16).to_numpy())
+
+
+def test_literal_key_suffix_column_survives_projection(tmp_path):
+    """REVIEW regression: a dataset column literally named `k_r` where
+    `k` is a join key is NOT a join-generated duplicate (join_schema
+    never suffixes keys) — required-column analysis must keep it on the
+    right-side scan instead of pruning it."""
+    ctx = local_context()
+    n = 8
+    data = {"k": np.arange(n, dtype=np.float32),
+            "k_r": 10.0 + np.arange(n, dtype=np.float32),
+            "w": np.ones(n, np.float32)}
+    path = str(tmp_path / "kr_ds")
+    DataFrame.from_dict(data, ctx).to_hpt(path, rows_per_group=4)
+    left = DataFrame.from_dict(
+        {"k": np.arange(n, dtype=np.float32),
+         "v": np.arange(n, dtype=np.float32)}, ctx, bucket_factor=4.0)
+    lf = (left.lazy()
+          .join(LazyFrame.read_parquet(path, ctx), ["k"], max_matches=1)
+          .project(["k", "k_r"]))
+    root, fired = optimize(lf.logical_plan)
+    scans = [nd for nd in logical.walk(root) if nd.kind == "scan"]
+    assert len(scans) == 1
+    assert "k_r" in scans[0].payload["columns"]  # literal col kept
+    assert "w" not in scans[0].payload["columns"]  # rule still narrows
+    assert "push-projection-into-scan" in fired
+    _assert_same_rows(lf.collect().to_numpy(),
+                      {"k": data["k"], "k_r": data["k_r"]})
 
 
 def test_parity_topk_and_repartition():
