@@ -20,6 +20,8 @@
                         scan→filter→groupby, planned vs eager wall time
   bench_spill_join    → out-of-core join beyond budget_rows (DESIGN.md
                         §10): chunk-streamed, exactness- and RSS-gated
+  bench_telemetry_overhead → collector on vs off around the 500k
+                        shuffle, gated < 2% (DESIGN.md §12)
 
 Methodology: every operator case is jitted ONCE and the compiled function is
 timed with a ``block_until_ready`` per iteration — numbers are steady-state
@@ -55,6 +57,37 @@ DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 #: this, the engine stopped being out-of-core and main() exits non-zero.
 SPILL_RSS_BUDGET_MB = 4096.0
 RSS_VIOLATIONS = []
+
+#: committed ceiling on what the telemetry machinery may add around a
+#: jitted operator call (DESIGN.md §12): collector-on vs collector-off
+#: on the 500k shuffle, best-of interleaved legs.  Violations fail
+#: main() exactly like the RSS budget.
+TELEMETRY_OVERHEAD_BUDGET_PCT = 2.0
+TELEMETRY_VIOLATIONS = []
+
+#: per-case static collective audits (compiled-HLO counts/bytes +
+#: achieved fraction of the ICI roofline), keyed by bench name; rides
+#: into the JSON record and the --telemetry-out artifact
+TELEMETRY = {}
+
+
+def _attach_telemetry(name: str, jfn, *args, us: float = None) -> None:
+    """Audit one jitted bench case: compiled-HLO collective counts and
+    payload bytes, plus — when the wall time is known — the achieved
+    exchange bandwidth against the ``roofline.ICI_BW`` bound."""
+    from repro.launch.roofline import ICI_BW
+    from repro.telemetry import compiled_collectives
+
+    rec = compiled_collectives(jfn, *args)
+    entry = {"collectives": rec["counts"],
+             "bytes_by_kind": rec["bytes_by_kind"],
+             "total_bytes": rec["total_bytes"],
+             "ring_cost_s": rec["ring_cost_s"]}
+    if us and rec["total_bytes"]:
+        achieved = rec["total_bytes"] / (us * 1e-6)
+        entry["achieved_bytes_per_s"] = round(achieved)
+        entry["ici_roofline_frac"] = round(achieved / ICI_BW, 4)
+    TELEMETRY[name] = entry
 
 
 def _peak_rss_mb() -> float:
@@ -166,6 +199,7 @@ def bench_shuffle(n: int = 500_000):
     jfn = jax.jit(lambda t: table_ops.shuffle(t, ["k"], ctx=CTX))
     us = _timeit(jfn, dt)
     _emit("fig2_shuffle", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+    _attach_telemetry("fig2_shuffle", jfn, dt, us=us)
 
 
 def bench_groupby_lowcard(n: int = 200_000, n_keys: int = 1_000):
@@ -272,6 +306,7 @@ def bench_orderby(n: int = 500_000):
     jfn = jax.jit(lambda t: table_ops.orderby(t, ["g", "t"], ctx=CTX))
     us = _timeit(jfn, dt, iters=3)
     _emit("orderby_500k", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+    _attach_telemetry("orderby_500k", jfn, dt, us=us)
 
 
 def bench_window_rolling(n: int = 200_000, n_part: int = 1_000,
@@ -326,6 +361,7 @@ def bench_topk(n: int = 500_000, k: int = 64):
     jfn = jax.jit(lambda t: table_ops.topk(t, "v", k, ctx=CTX))
     us = _timeit(jfn, dt, iters=3)
     _emit("topk_500k", us, f"{n / (us * 1e-6) / 1e6:.1f}Mrow/s")
+    _attach_telemetry("topk_500k", jfn, dt, us=us)
 
 
 def bench_setop_union(n: int = 200_000):
@@ -538,6 +574,70 @@ def bench_spill_join(n: int = 2_000_000, budget_rows: int = 262_144):
               f"> committed {SPILL_RSS_BUDGET_MB:.0f}MB budget", flush=True)
 
 
+def bench_telemetry_overhead(n: int = 500_000, rounds: int = 15):
+    """Telemetry overhead contract (DESIGN.md §12): collector on vs off.
+
+    Both legs run the identical pre-jitted 500k shuffle, blocking every
+    call; the ON leg additionally activates a collector and wraps each
+    call in a span (open, ``block_until_ready``, close — everything the
+    instrumentation adds around a jit boundary).  Legs are interleaved
+    and compared best-of-``rounds`` so runner noise cancels instead of
+    deciding the gate; a trip re-measures once at double rounds before
+    counting (a genuine per-span cost reproduces; a one-off scheduler /
+    page-cache spike right after the spill bench does not).  The ratio
+    must stay under ``TELEMETRY_OVERHEAD_BUDGET_PCT`` or main() exits
+    non-zero.
+    """
+    from repro import telemetry
+
+    dt = _table(n)
+    jfn = jax.jit(lambda t: table_ops.shuffle(t, ["k"], ctx=CTX))
+    for _ in range(3):
+        jax.block_until_ready(jfn(dt))
+
+    def leg_off() -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(dt))
+        return time.perf_counter() - t0
+
+    def leg_on() -> float:
+        with telemetry.trace("bench-overhead") as rec:
+            t0 = time.perf_counter()
+            with rec.span("bench.shuffle") as sp:
+                sp.block(jfn(dt))
+            return time.perf_counter() - t0
+
+    def measure(k: int):
+        offs, ons = [], []
+        for _ in range(k):
+            offs.append(leg_off())
+            ons.append(leg_on())
+        return min(offs), min(ons)
+
+    best_off, best_on = measure(rounds)
+    overhead = best_on / best_off - 1.0
+    if overhead * 100 > TELEMETRY_OVERHEAD_BUDGET_PCT:
+        off2, on2 = measure(rounds * 2)
+        best_off, best_on = min(best_off, off2), min(best_on, on2)
+        overhead = best_on / best_off - 1.0
+    name = "telemetry_overhead_500k"
+    _emit(name, best_off * 1e6, f"overhead_{overhead * 100:.2f}pct")
+    if overhead * 100 > TELEMETRY_OVERHEAD_BUDGET_PCT:
+        TELEMETRY_VIOLATIONS.append((name, overhead * 100))
+        print(f"# TELEMETRY OVERHEAD VIOLATION: {name} on/off = "
+              f"{overhead:+.2%} > {TELEMETRY_OVERHEAD_BUDGET_PCT:.0f}% "
+              f"budget", flush=True)
+
+
+def write_telemetry(path: str) -> None:
+    """The per-bench collective audits as one JSON artifact (CI uploads
+    this next to the perf record)."""
+    with open(path, "w") as f:
+        json.dump(TELEMETRY, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
 def write_json(path: str, merge: bool = False) -> None:
     """Machine-readable perf record (name → µs + derived metric).
 
@@ -548,9 +648,12 @@ def write_json(path: str, merge: bool = False) -> None:
     if merge and os.path.exists(path):
         with open(path) as f:
             data = json.load(f)
-    data.update({name: {"us_per_call": round(us, 1), "derived": derived,
-                        "peak_rss_mb": round(rss, 1)}
-                 for name, us, derived, rss in ROWS})
+    for name, us, derived, rss in ROWS:
+        rec = {"us_per_call": round(us, 1), "derived": derived,
+               "peak_rss_mb": round(rss, 1)}
+        if name in TELEMETRY:
+            rec["telemetry"] = TELEMETRY[name]
+        data[name] = rec
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -615,6 +718,10 @@ def main(argv=None) -> None:
     p.add_argument("--spill-only", action="store_true",
                    help="run only the memory-capped out-of-core spill "
                         "case at full size (the CI spill job)")
+    p.add_argument("--telemetry-out", metavar="TELEMETRY.json",
+                   help="also write the per-bench collective audits "
+                        "(compiled-HLO counts/bytes, roofline fraction) "
+                        "as a standalone JSON artifact")
     p.add_argument("--compare-files", nargs=2, metavar=("FRESH", "BASELINE"),
                    help="compare two existing records (no benches run): "
                         "the like-for-like gate — both sides same sizes, "
@@ -666,6 +773,7 @@ def main(argv=None) -> None:
         bench_scan_ingest(n=50_000)
         bench_planned_pipeline(n=50_000)
         bench_spill_join(n=400_000, budget_rows=65_536)
+        bench_telemetry_overhead()  # full 500k: the committed contract
     else:
         bench_array_ops()
         bench_table_ops()
@@ -684,7 +792,10 @@ def main(argv=None) -> None:
         bench_scan_ingest()
         bench_planned_pipeline()
         bench_spill_join()
+        bench_telemetry_overhead()
     write_json(args.out)
+    if args.telemetry_out:
+        write_telemetry(args.telemetry_out)
     print(f"# {len(ROWS)} benchmarks complete")
     failures = 0
     if base is not None:
@@ -695,6 +806,12 @@ def main(argv=None) -> None:
               f"{SPILL_RSS_BUDGET_MB:.0f}MB RSS budget: "
               + ", ".join(f"{n}={p:.0f}MB" for n, p in RSS_VIOLATIONS))
         failures += len(RSS_VIOLATIONS)
+    if TELEMETRY_VIOLATIONS:
+        print(f"# FAILED: {len(TELEMETRY_VIOLATIONS)} case(s) over the "
+              f"{TELEMETRY_OVERHEAD_BUDGET_PCT:.0f}% telemetry overhead "
+              "budget: " + ", ".join(f"{n}={p:+.2f}%"
+                                     for n, p in TELEMETRY_VIOLATIONS))
+        failures += len(TELEMETRY_VIOLATIONS)
     if failures:
         raise SystemExit(1)
 

@@ -13,6 +13,9 @@ the out-of-core spill path (DESIGN.md §10) — same API, ``spill="auto"``.
 Part 7 plans the same kind of pipeline lazily (DESIGN.md §11): the
 rewriter pushes the filter and projection into the scan and ``explain()``
 shows the plan before and after optimization.
+Part 8 re-runs the planned pipeline under a telemetry collector
+(DESIGN.md §12): the plan-vs-observed collective audit, per-node
+measured times via ``explain(analyze=True)``, and a Chrome-trace export.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -170,6 +173,30 @@ def main():
         daily = lazy.collect()                   # ONE traced program
         print(f"planned pipeline: {len(daily)} rows, "
               f"exact={daily.overflow_report.is_exact()}")
+
+        # --- 8. telemetry: spans, metrics, plan-vs-observed (§12) ----------
+        # Off by default (zero overhead); under an active collector every
+        # operator/plan-node/scan becomes a span, overflow and scan facts
+        # land as metrics, and collect() audits the planner's predicted
+        # exchange count against the traced jaxpr AND the compiled HLO.
+        from repro import telemetry
+
+        with telemetry.trace("quickstart") as rec:
+            lazy.collect(telemetry=rec, jit=False)
+        audit = rec.audits[-1]
+        print(f"collective audit: predicted={audit['predicted_a2a']} "
+              f"traced={audit['traced_a2a']} "
+              f"observed={audit['observed_a2a']} "
+              f"(consistent={audit['consistent']})")
+        assert audit["consistent"]
+        print("-- explain(analyze=True): measured times/rows per node --")
+        print(lazy.explain(analyze=True).split("== physical plan ==")[1])
+        trace_path = os.path.join(root, "trace.json")
+        telemetry.export_chrome_trace(rec, trace_path)  # Perfetto-loadable
+        snap = telemetry.metrics_snapshot(rec)
+        print(f"chrome trace: {snap['n_spans']} spans; metrics: "
+              f"{len(snap['metrics']['counters'])} counters, "
+              f"{len(snap['metrics']['gauges'])} gauges")
     print("quickstart OK")
 
 

@@ -164,7 +164,17 @@ class TSet:
         """Execute the dataflow graph and materialize the result."""
         self._last_report = report = OverflowReport()
         chunks = _execute(self._node, self._ctx, report)
+        self._publish_report()
         return _concat_chunks(chunks, self._ctx)
+
+    def _publish_report(self) -> None:
+        """Mirror the materialization's overflow into the active telemetry
+        collector under the same dotted labels (no-op when off)."""
+        from repro import telemetry
+
+        rec = telemetry.current()
+        if rec is not None and self._last_report is not None:
+            rec.record_overflow(self._last_report)
 
     def lazy(self, name: str = "tset"):
         """Bridge into the query planner (repro.plan, DESIGN.md §11).
@@ -187,6 +197,7 @@ class TSet:
         """Streaming scalar aggregate (per-chunk partials, merged)."""
         self._last_report = report = OverflowReport()
         chunks = _execute(self._node, self._ctx, report)
+        self._publish_report()
         parts = [table_ops.aggregate(c, column, op, ctx=self._ctx)
                  for c in chunks]
         stack = jnp.stack(parts)
@@ -200,6 +211,7 @@ class TSet:
         self._last_report = report = OverflowReport()
         dt = _concat_chunks(_execute(self._node, self._ctx, report),
                             self._ctx)
+        self._publish_report()
         return table_ops.quantile(dt, column, qs, ctx=self._ctx, **kw)
 
     def to_numpy(self) -> Dict[str, np.ndarray]:

@@ -20,6 +20,8 @@ import enum
 import functools
 from typing import Callable, Dict, List
 
+from repro.telemetry import record as _telemetry
+
 
 class Abstraction(enum.Enum):
     ARRAY = "array"
@@ -72,7 +74,12 @@ def operator(name: str, abstraction: Abstraction, *,
 
         @functools.wraps(fn)
         def inner(*args, **kwargs):
-            return fn(*args, **kwargs)
+            # telemetry hook: ONE global check when off (the overhead
+            # contract); under an active collector every registered
+            # operator call becomes a span with rows in/out recorded
+            if _telemetry._ACTIVE is None:
+                return fn(*args, **kwargs)
+            return _telemetry.operator_call(name, fn, args, kwargs)
 
         inner.op_info = info  # type: ignore[attr-defined]
         return inner

@@ -90,6 +90,19 @@ class OverflowReport:
                 f"or enable spill (spill='auto')")
         return self
 
+    def to_metrics(self, prefix: str = "overflow") -> Dict[str, int]:
+        """This report as flat dotted metrics for the telemetry layer.
+
+        Lost rows keep their source labels under ``<prefix>.``
+        (``overflow.join.fanout``); spill-recovered rows land under
+        ``<prefix>.recovered.``, so one metrics dump carries the same
+        exactness story the report itself tells (DESIGN.md §12).
+        """
+        out = {f"{prefix}.{k}": v for k, v in sorted(self.entries.items())}
+        out.update({f"{prefix}.recovered.{k}": v
+                    for k, v in sorted(self.recovered.items())})
+        return out
+
     def __iter__(self) -> Iterator[Tuple[str, int]]:
         return iter(sorted(self.entries.items()))
 

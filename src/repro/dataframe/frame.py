@@ -17,6 +17,19 @@ from repro.core import DistTable, HPTMTContext, Table, table_ops
 from repro.core.report import OverflowError, OverflowReport
 
 
+def _publish_report(report: OverflowReport) -> OverflowReport:
+    """Mirror a lineage report into the active telemetry collector (a
+    no-op when telemetry is off).  Gauge semantics make re-publishing a
+    cumulative lineage idempotent — overflow shows up in the metrics
+    dump under the same dotted labels the report itself uses."""
+    from repro import telemetry
+
+    rec = telemetry.current()
+    if rec is not None:
+        rec.record_overflow(report)
+    return report
+
+
 def _spill_mode(spill: object) -> object:
     """Validate the ``spill=`` tri-state eagerly, naming the bad value."""
     if spill not in (False, True, "auto"):
@@ -112,8 +125,8 @@ class DataFrame:
             allow_narrowing=allow_narrowing)
         if strict:
             cls._check(overflow, "scan")
-        return cls(dt, ctx,
-                   OverflowReport().add("scan.capacity", overflow))
+        return cls(dt, ctx, _publish_report(
+            OverflowReport().add("scan.capacity", overflow)))
 
     read_dataset = read_parquet  # format-neutral alias
 
@@ -394,7 +407,7 @@ class DataFrame:
         rep = OverflowReport().merge(self._report)
         for o in others:
             rep.merge(o._report)
-        return DataFrame(out, self._ctx, rep)
+        return DataFrame(out, self._ctx, _publish_report(rep))
 
     def _from_spill(self, res, *others: "DataFrame") -> "DataFrame":
         """Materialize a spilled operator's chunk stream into a DataFrame.
@@ -414,7 +427,7 @@ class DataFrame:
                 rep.merge(o._report)
             rep.merge(res.report)
             out = _concat_chunks(chunks, self._ctx)
-        return DataFrame(out, self._ctx, rep)
+        return DataFrame(out, self._ctx, _publish_report(rep))
 
     @staticmethod
     def _check(overflow, op: str) -> None:

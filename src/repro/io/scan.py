@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.table import DistTable, Partitioning, Table
 from .dataset import Dataset, Fragment, open_dataset
 
@@ -173,13 +174,16 @@ class ScanSource:
                     if not (pr.op == "!="
                             and self.dataset.schema[pr.column].np_dtype.kind
                             == "f")]
-        kept: List[Fragment] = []
-        for frag in self.dataset.fragments:
-            if all(pr.maybe_satisfied(frag.stats.get(pr.column))
-                   for pr in prunable):
-                kept.append(frag)
-        self.stats.row_groups_skipped = (
-            len(self.dataset.fragments) - len(kept))
+        with telemetry.span("io.scan.prune",
+                            fragments=len(self.dataset.fragments)) as sp:
+            kept: List[Fragment] = []
+            for frag in self.dataset.fragments:
+                if all(pr.maybe_satisfied(frag.stats.get(pr.column))
+                       for pr in prunable):
+                    kept.append(frag)
+            self.stats.row_groups_skipped = (
+                len(self.dataset.fragments) - len(kept))
+            sp.attrs["pruned"] = self.stats.row_groups_skipped
         self.stats.columns_read = len(self.read_columns) if kept else 0
 
         # partitioned re-entry: manifest evidence + matching context +
@@ -234,24 +238,28 @@ class ScanSource:
         ``read_row_groups`` call — one file open / footer parse per run,
         not per fragment.
         """
-        if frags[0].format == "hpt":
-            from .native import read_hpt
+        with telemetry.span("io.scan.read", path=frags[0].path,
+                            fragments=len(frags)) as sp:
+            if frags[0].format == "hpt":
+                from .native import read_hpt
 
-            cols, n = read_hpt(frags[0].path, self.read_columns)
-        else:
-            from .parquet import read_row_groups
+                cols, n = read_hpt(frags[0].path, self.read_columns)
+            else:
+                from .parquet import read_row_groups
 
-            cols, n = read_row_groups(frags[0].path,
-                                      [f.row_group for f in frags],
-                                      self.read_columns)
-        self.stats.rows_scanned += n
-        if self.predicate:
-            keep = np.ones(n, bool)
-            for pr in self.predicate:
-                keep &= pr.mask(cols)
-            cols = {k: v[keep] for k, v in cols.items()}
-            n = int(keep.sum())
-        self.stats.rows_selected += n
+                cols, n = read_row_groups(frags[0].path,
+                                          [f.row_group for f in frags],
+                                          self.read_columns)
+            self.stats.rows_scanned += n
+            sp.attrs["rows_scanned"] = n
+            if self.predicate:
+                keep = np.ones(n, bool)
+                for pr in self.predicate:
+                    keep &= pr.mask(cols)
+                cols = {k: v[keep] for k, v in cols.items()}
+                n = int(keep.sum())
+            self.stats.rows_selected += n
+            sp.attrs["rows_selected"] = n
         return {k: cols[k] for k in self.out_columns}, n
 
     def _load_fragments(self, frags: Sequence[Fragment]
@@ -296,12 +304,20 @@ class ScanSource:
         self._reset_io_stats()
         overflow = 0
         tables = []
-        for frags in self._by_shard:
-            t, ov = self._shard_table(frags, self.shard_capacity)
-            tables.append(t)
-            overflow += ov
-        dt = DistTable.from_shard_tables(tables, self.ctx,
-                                         partitioning=self._partitioning)
+        with telemetry.span("io.scan.materialize",
+                            shards=self.ctx.n_shards) as sp:
+            for frags in self._by_shard:
+                t, ov = self._shard_table(frags, self.shard_capacity)
+                tables.append(t)
+                overflow += ov
+            dt = DistTable.from_shard_tables(tables, self.ctx,
+                                             partitioning=self._partitioning)
+            sp.block(dt)
+            sp.attrs["rows"] = self.stats.rows_selected
+            sp.attrs["overflow"] = overflow
+        rec = telemetry.current()
+        if rec is not None:
+            rec.record_scan(self.stats)
         return dt, overflow
 
     def chunks(self):

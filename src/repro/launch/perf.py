@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 """Perf-iteration tool: lower one cell (with config/rule overrides), report
 the three roofline terms and the largest collective/memory contributors.
 
@@ -10,33 +6,17 @@ the three roofline terms and the largest collective/memory contributors.
 
 Each hypothesis→change→measure cycle in EXPERIMENTS.md §Perf is one
 invocation of this tool.
+
+Importing this module is side-effect free: the 512-host-device XLA flag
+the CLI needs is set under ``__main__`` only (before jax initializes),
+never at import time — ``import repro.launch.perf`` from a test or a
+library must not reconfigure the process's device topology.
 """
 import argparse
-import collections
 import dataclasses
-import json
-import re
 import sys
 
-
-def _top_collectives(hlo_text: str, k: int = 12):
-    from repro.launch.roofline import _shape_bytes
-    rows = []
-    for line in hlo_text.splitlines():
-        m = re.match(
-            r"\s*%?\S+ = (.+?)\s+(all-gather|all-reduce|reduce-scatter"
-            r"|all-to-all|collective-permute)(?:-start)?\(", line)
-        if not m:
-            continue
-        b = _shape_bytes(m.group(1))
-        if b:
-            rows.append((b, m.group(2), m.group(1)[:70]))
-    agg = collections.Counter()
-    for b, kind, shape in rows:
-        agg[(kind, shape)] += b
-    top = sorted(((b, kind, shape) for (kind, shape), b in agg.items()),
-                 reverse=True)[:k]
-    return top
+from repro.telemetry.audit import top_collectives as _top_collectives
 
 
 def measure(arch, shape_name, set_overrides=None, rule_overrides=None,
@@ -141,4 +121,11 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    # the CLI wants a 512-device host platform; set it HERE (jax has not
+    # initialized yet — measure() imports it lazily), not at import time
+    import os
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512")
     sys.exit(main())

@@ -8,7 +8,7 @@ renders of the same plan compare equal (DESIGN.md §11).
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Optional
 
 from .logical import LogicalNode
 
@@ -77,23 +77,73 @@ def render_tree(root: LogicalNode) -> str:
     return "\n".join(lines)
 
 
-def render_physical(plan) -> str:
+def plan_annotations(rec) -> Dict[int, Dict]:
+    """Join a collector's measured facts back onto physical step indices.
+
+    ``Collector.plan_steps`` carries what the instrumented plan observed
+    (inclusive ``time_us``, ``rows_out``, ``a2a_bytes``); the span tree
+    additionally yields each node's SELF time — its inclusive duration
+    minus its direct ``plan.*`` children, so a parent is not charged for
+    work its inputs did.
+    """
+    ann: Dict[int, Dict] = {i: dict(f) for i, f in rec.plan_steps.items()}
+    for sp in rec.all_spans():
+        parts = sp.name.split(".")
+        if len(parts) < 3 or parts[0] != "plan":
+            continue
+        try:
+            idx = int(parts[1])
+        except ValueError:
+            continue
+        child_us = sum(c.dur_us for c in sp.children
+                       if c.name.startswith("plan.")
+                       and c.name != "plan.collect")
+        ann.setdefault(idx, {})["self_us"] = sp.dur_us - child_us
+    return ann
+
+
+def _fmt_annotation(a: Dict) -> str:
+    bits = []
+    if "self_us" in a:
+        bits.append(f"time={a['self_us'] / 1e3:.3f}ms")
+    if a.get("rows_out") is not None:
+        bits.append(f"rows={a['rows_out']}")
+    if "a2a_bytes" in a:
+        bits.append(f"bytes={a['a2a_bytes']}")
+    return "  [" + " ".join(bits) + "]" if bits else ""
+
+
+def render_physical(plan, annotations: Optional[Dict[int, Dict]] = None,
+                    audit: Optional[Dict] = None) -> str:
     lines = []
     for s in plan.steps:
         det = f"  -- {s.detail}" if s.detail else ""
-        lines.append(f"  {s.index:2d}. {s.op:<12} {s.strategy:<24} "
-                     f"all_to_all={s.a2a}{det}")
+        line = (f"  {s.index:2d}. {s.op:<12} {s.strategy:<24} "
+                f"all_to_all={s.a2a}{det}")
+        if annotations is not None and s.index in annotations:
+            line += _fmt_annotation(annotations[s.index])
+        lines.append(line)
     lines.append(f"  predicted collectives: {plan.predicted_collectives} "
                  f"all_to_all on {plan.ctx.n_shards} shards "
                  f"(output layout: {plan.out_layout.describe()})")
+    if audit is not None:
+        a2a_bytes = audit["observed_bytes_by_kind"].get("all-to-all", 0)
+        lines.append(
+            f"  audit: predicted={audit.get('predicted_a2a', '?')} "
+            f"traced={audit['traced_a2a']} "
+            f"observed={audit['observed_a2a']} all_to_all "
+            f"({a2a_bytes} bytes in compiled HLO)")
     return "\n".join(lines)
 
 
 def render_explain(logical_root: LogicalNode, optimized_root: LogicalNode,
-                   fired, plan) -> str:
+                   fired, plan,
+                   annotations: Optional[Dict[int, Dict]] = None,
+                   audit: Optional[Dict] = None) -> str:
     parts = ["== logical plan ==", render_tree(logical_root),
              "== rewrites =="]
     parts.append("  " + (", ".join(fired) if fired else "(none fired)"))
     parts += ["== optimized plan ==", render_tree(optimized_root),
-              "== physical plan ==", render_physical(plan)]
+              "== physical plan ==",
+              render_physical(plan, annotations, audit)]
     return "\n".join(parts)

@@ -16,9 +16,16 @@ from typing import Optional, Sequence, Tuple
 from repro.core.report import OverflowError, OverflowReport
 
 from . import logical as L
-from .explain import render_explain
+from .explain import plan_annotations, render_explain
 from .physical import PhysicalPlan
 from .rules import optimize
+
+
+class PlanAuditError(RuntimeError):
+    """The three collective layers disagree: the planner's predicted
+    AllToAll count, the traced jaxpr count, and the compiled-HLO count
+    must all be equal (the plan contract, DESIGN.md §11/§12).  Raised by
+    ``collect(telemetry=..., strict=True)`` when they are not."""
 
 
 class LazyFrame:
@@ -127,7 +134,8 @@ class LazyFrame:
         root, _ = optimize(self._node)
         return PhysicalPlan(root, self._ctx)
 
-    def collect(self, *, strict: bool = True, jit: bool = True):
+    def collect(self, *, strict: bool = True, jit: bool = True,
+                telemetry=None):
         """Optimize, lower, run; returns an eager :class:`DataFrame`.
 
         One program executes the whole pipeline (``jit=True`` compiles
@@ -135,6 +143,14 @@ class LazyFrame:
         any step lands in the result's ``overflow_report`` under
         ``plan.<step>`` labels and raises unless ``strict=False`` — the
         same §2 contract as the eager operators.
+
+        ``telemetry`` accepts a :class:`repro.telemetry.Collector`: the
+        run then records spans (per physical node when ``jit=False`` —
+        inside one jitted program the host clock cannot attribute time
+        to nodes), publishes the plan-vs-observed collective audit
+        (predicted == traced jaxpr == compiled HLO; a mismatch raises
+        :class:`PlanAuditError` under ``strict=True``), and files the
+        predicted strategy of every step next to its measured facts.
         """
         import jax
 
@@ -142,13 +158,19 @@ class LazyFrame:
 
         root, _ = optimize(self._node)
         plan = PhysicalPlan(root, self._ctx)
-        inputs = plan.inputs()
-        fn = jax.jit(plan.fn) if jit else plan.fn
-        out, ovs = fn(*inputs)
+        if telemetry is not None:
+            out, ovs = self._collect_audited(plan, telemetry, jit=jit,
+                                             strict=strict)
+        else:
+            inputs = plan.inputs()
+            fn = jax.jit(plan.fn) if jit else plan.fn
+            out, ovs = fn(*inputs)
         report = OverflowReport().merge(self._report)
         report.add("plan.scan.capacity", plan.scan_overflow)
         for label, v in sorted(ovs.items()):
             report.add(f"plan.{label}", int(v))
+        if telemetry is not None:
+            telemetry.record_overflow(report)
         if strict and not report.is_exact():
             detail = ", ".join(f"{k}={v}" for k, v in report)
             raise OverflowError(
@@ -156,13 +178,78 @@ class LazyFrame:
                 f"— re-run with larger capacities, or collect(strict=False)")
         return DataFrame(out, self._ctx, report)
 
-    def explain(self, *, optimized: bool = True) -> str:
+    def _collect_audited(self, plan: PhysicalPlan, rec, *, jit: bool,
+                         strict: bool):
+        """Run ``plan`` under collector ``rec``: root span + per-step
+        predicted facts + the three-layer collective audit."""
+        import jax
+
+        from repro import telemetry as T
+
+        for s in plan.steps:
+            rec.observe_step(s.index, op=s.op, strategy=s.strategy,
+                             predicted_a2a=s.a2a)
+        with T.using(rec):
+            with rec.span("plan.collect", steps=len(plan.steps), jit=jit,
+                          predicted_a2a=plan.predicted_collectives) as sp:
+                inputs = plan.inputs()
+                fn = jax.jit(plan.fn) if jit else plan.fn
+                out, ovs = fn(*inputs)
+                sp.block(out)
+        audit = T.program_audit(plan.fn, *inputs,
+                                n_shards=self._ctx.n_shards,
+                                predicted_a2a=plan.predicted_collectives)
+        rec.record_audit(audit)
+        rec.metrics.gauge("plan.predicted_a2a", audit["predicted_a2a"])
+        rec.metrics.gauge("plan.traced_a2a", audit["traced_a2a"])
+        rec.metrics.gauge("plan.observed_a2a", audit["observed_a2a"])
+        rec.metrics.gauge("plan.observed_bytes",
+                          audit["observed_total_bytes"])
+        # map the k-th traced exchange to the k-th exchanging step (steps
+        # are appended children-first, i.e. in execution order) — skipped
+        # if the counts disagree, never guessed
+        payloads = [e["bytes"] for e in audit["exchanges"]]
+        if len(payloads) == sum(s.a2a for s in plan.steps):
+            it = iter(payloads)
+            for s in plan.steps:
+                if s.a2a:
+                    rec.observe_step(s.index, a2a_bytes=sum(
+                        next(it) for _ in range(s.a2a)))
+        if strict and not audit["consistent"]:
+            raise PlanAuditError(
+                f"collective audit mismatch: planner predicted "
+                f"{audit['predicted_a2a']} all_to_all, jaxpr traced "
+                f"{audit['traced_a2a']}, compiled HLO observed "
+                f"{audit['observed_a2a']} — the plan contract is broken")
+        return out, ovs
+
+    def explain(self, *, optimized: bool = True,
+                analyze: bool = False) -> str:
         """Stable text rendering: logical plan → fired rewrite rules →
         optimized plan → physical steps with predicted collective counts.
-        Builds the physical plan but reads no data."""
+        Builds the physical plan but reads no data.
+
+        ``analyze=True`` EXECUTES the pipeline op-by-op under a private
+        collector and annotates every physical step with its measured
+        self-time, output rows, and exchange payload bytes, plus the
+        predicted/traced/observed audit line (the runtime form of
+        EXPLAIN ANALYZE).
+        """
+        if analyze and not optimized:
+            raise ValueError("explain(analyze=True) runs the optimized "
+                             "plan; optimized=False is not analyzable")
         root, fired = optimize(self._node)
         plan = PhysicalPlan(root if optimized else self._node, self._ctx)
-        return render_explain(self._node, root, fired, plan)
+        if not analyze:
+            return render_explain(self._node, root, fired, plan)
+        from repro import telemetry as T
+
+        rec = T.Collector("explain-analyze")
+        self.collect(telemetry=rec, jit=False, strict=False)
+        audit = rec.audits[-1] if rec.audits else None
+        return render_explain(self._node, root, fired, plan,
+                              annotations=plan_annotations(rec),
+                              audit=audit)
 
 
 class LazyWindow:

@@ -49,6 +49,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import table_ops
 from repro.core.table import (DistTable, partitioning_ascending,
                               partitioning_keys, partitioning_kind,
@@ -183,7 +184,40 @@ class PhysicalPlan:
         return s
 
     def _lower(self, node: LogicalNode) -> Tuple[Callable, Layout]:
-        return getattr(self, f"_lower_{node.kind}")(node)
+        run, layout = getattr(self, f"_lower_{node.kind}")(node)
+        # every _lower_* appends its own step LAST, so steps[-1] here is
+        # the node just lowered (children were appended before it)
+        return self._instrument(run, self.steps[-1], layout), layout
+
+    def _instrument(self, run: Callable, step: PlanStep,
+                    layout: Layout) -> Callable:
+        """Per-node telemetry wrapper.
+
+        Inert unless a collector is active AND the plan runs op-by-op
+        (``collect(jit=False)``): inside a jit trace the host clock lies,
+        so the wrapper passes straight through and the traced program is
+        byte-identical to the uninstrumented one.  When live, each node
+        becomes a ``plan.<index>.<op>`` span (children nested inside) and
+        its measured time/rows land in ``Collector.plan_steps`` for
+        ``explain(analyze=True)`` to join against the predicted steps.
+        """
+        label = f"plan.{step.index}.{step.op}"
+
+        def wrapped(tables):
+            rec = telemetry.current()
+            if rec is None or telemetry.tracing():
+                return run(tables)
+            with rec.span(label, op=step.op, strategy=step.strategy,
+                          a2a=step.a2a, layout=layout.describe()) as sp:
+                out, ovs = run(tables)
+                sp.block(out)
+                rows = telemetry.record._rows_of(out)
+                if rows is not None:
+                    sp.attrs["rows_out"] = rows
+            rec.observe_step(step.index, time_us=sp.dur_us, rows_out=rows)
+            return out, ovs
+
+        return wrapped
 
     def _lower_source(self, node: LogicalNode):
         dt: DistTable = node.payload["table"]

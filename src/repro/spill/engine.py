@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import table_ops
 from repro.core.context import HPTMTContext
 from repro.core.exchange import H1_NAME, H2_NAME, LANES_NAME
@@ -130,15 +131,17 @@ def _write_buckets(store: SpillStore, tag: str, cols: Dict[str, np.ndarray],
     """Write contiguous ``(q, s)`` groups of the permuted chunk as runs."""
     if len(order) == 0:
         return
-    qs = q[order]
-    ss = s[order]
-    boundary = np.nonzero((qs[1:] != qs[:-1]) | (ss[1:] != ss[:-1]))[0] + 1
-    starts = np.concatenate([[0], boundary])
-    stops = np.concatenate([boundary, [len(order)]])
-    for a, b in zip(starts, stops):
-        rows = order[a:b]
-        store.write_run(tag, int(qs[a]), int(ss[a]),
-                        {k: v[rows] for k, v in cols.items()}, int(b - a))
+    with telemetry.span("spill.write", tag=tag, rows=len(order),
+                        bytes=sum(int(v.nbytes) for v in cols.values())):
+        qs = q[order]
+        ss = s[order]
+        boundary = np.nonzero((qs[1:] != qs[:-1]) | (ss[1:] != ss[:-1]))[0] + 1
+        starts = np.concatenate([[0], boundary])
+        stops = np.concatenate([boundary, [len(order)]])
+        for a, b in zip(starts, stops):
+            rows = order[a:b]
+            store.write_run(tag, int(qs[a]), int(ss[a]),
+                            {k: v[rows] for k, v in cols.items()}, int(b - a))
 
 
 def _partition_hash(store: SpillStore, tag: str, src, keys: Sequence[str],
@@ -282,18 +285,22 @@ def _load_hash_partition(store: SpillStore, tag: str, q: int,
                          schema: Dict[str, Tuple], keys: Sequence[str],
                          ctx: HPTMTContext, capacity: int) -> DistTable:
     """Re-ingest one partition with TRUE hash-partitioning metadata."""
-    tables = []
-    for s in range(ctx.n_shards):
-        cols, n = store.read_partition(tag, q, s)
-        if n == 0:
-            cols = _empty_cols(schema)
-        cols.pop(H1_NAME, None)
-        cols.pop(H2_NAME, None)
-        tables.append(Table.from_arrays(
-            {k: jnp.asarray(v) for k, v in cols.items()},
-            num_rows=n, capacity=capacity))
-    return DistTable.from_shard_tables(
-        tables, ctx, partitioning=(tuple(keys), ctx.n_shards))
+    with telemetry.span("spill.read", tag=tag, partition=q) as sp:
+        tables = []
+        total = 0
+        for s in range(ctx.n_shards):
+            cols, n = store.read_partition(tag, q, s)
+            total += n
+            if n == 0:
+                cols = _empty_cols(schema)
+            cols.pop(H1_NAME, None)
+            cols.pop(H2_NAME, None)
+            tables.append(Table.from_arrays(
+                {k: jnp.asarray(v) for k, v in cols.items()},
+                num_rows=n, capacity=capacity))
+        sp.attrs["rows"] = total
+        return DistTable.from_shard_tables(
+            tables, ctx, partitioning=(tuple(keys), ctx.n_shards))
 
 
 def _load_range_partition(store: SpillStore, tag: str, q: int,
@@ -307,23 +314,25 @@ def _load_range_partition(store: SpillStore, tag: str, q: int,
     layout the sample-sort exchange would have produced, so the per-pair
     window runs its zero-AllToAll / zero-sort elided path.
     """
-    cols, n = store.read_partition(tag, q)
-    if n == 0:
-        cols = dict(_empty_cols(schema))
-        cols[LANES_NAME] = np.zeros((0, len(keys)), np.uint32)
-    order = np_lex_order(cols[LANES_NAME])
-    cols = {k: v[order] for k, v in cols.items()
-            if k not in (H1_NAME, H2_NAME, LANES_NAME)}
-    per = max(1, math.ceil(n / ctx.n_shards))
-    tables = []
-    for s in range(ctx.n_shards):
-        a, b = min(s * per, n), min((s + 1) * per, n)
-        tables.append(Table.from_arrays(
-            {k: jnp.asarray(v[a:b]) for k, v in cols.items()},
-            num_rows=b - a, capacity=capacity))
-    return DistTable.from_shard_tables(
-        tables, ctx,
-        partitioning=range_partitioning(keys, ascending, ctx.n_shards))
+    with telemetry.span("spill.read", tag=tag, partition=q) as sp:
+        cols, n = store.read_partition(tag, q)
+        sp.attrs["rows"] = n
+        if n == 0:
+            cols = dict(_empty_cols(schema))
+            cols[LANES_NAME] = np.zeros((0, len(keys)), np.uint32)
+        order = np_lex_order(cols[LANES_NAME])
+        cols = {k: v[order] for k, v in cols.items()
+                if k not in (H1_NAME, H2_NAME, LANES_NAME)}
+        per = max(1, math.ceil(n / ctx.n_shards))
+        tables = []
+        for s in range(ctx.n_shards):
+            a, b = min(s * per, n), min((s + 1) * per, n)
+            tables.append(Table.from_arrays(
+                {k: jnp.asarray(v[a:b]) for k, v in cols.items()},
+                num_rows=b - a, capacity=capacity))
+        return DistTable.from_shard_tables(
+            tables, ctx,
+            partitioning=range_partitioning(keys, ascending, ctx.n_shards))
 
 
 def _write_output(store: SpillStore, q: int, dt: DistTable) -> int:
@@ -504,7 +513,10 @@ def spill_join(left, right, keys: Sequence[str], *, ctx: HPTMTContext,
                                        ctx, lcap)
             rdt = _load_hash_partition(store, "right", q, rschema, keys,
                                        ctx, rcap)
-            out, ov = pair_fn(ldt, rdt)
+            with telemetry.span("spill.reentry", op="table.join",
+                                partition=q) as sp:
+                out, ov = pair_fn(ldt, rdt)
+                sp.block(out)
             report.add("join.fanout", ov)
             if out_schema is None:
                 out_schema = _out_schema_of(out)
@@ -559,7 +571,10 @@ def spill_groupby(src, keys: Sequence[str],
                 continue
             cap = _round_capacity(rows, budget_rows)
             dt = _load_hash_partition(store, "in", q, schema, keys, ctx, cap)
-            out, ov = pair_fn(dt)
+            with telemetry.span("spill.reentry", op="table.groupby",
+                                partition=q) as sp:
+                out, ov = pair_fn(dt)
+                sp.block(out)
             report.add("groupby.slots", ov)
             if out_schema is None:
                 out_schema = _out_schema_of(out)
@@ -629,7 +644,10 @@ def spill_window(src, partition_by, order_by, aggs, *, ctx: HPTMTContext,
             cap = _round_capacity(per, budget_rows)
             dt = _load_range_partition(store, "in", q, schema, keys, asc,
                                        ctx, cap)
-            out, ov = pair_fn(dt)
+            with telemetry.span("spill.reentry", op="table.window",
+                                partition=q) as sp:
+                out, ov = pair_fn(dt)
+                sp.block(out)
             report.add("window.truncated", ov)
             if out_schema is None:
                 out_schema = _out_schema_of(out)
@@ -649,6 +667,13 @@ def spill_window(src, partition_by, order_by, aggs, *, ctx: HPTMTContext,
 def _finish(store: SpillStore, ctx, partitioning, report, stats,
             out_schema) -> SpillResult:
     stats.bytes_spilled = store.bytes_written
+    rec = telemetry.current()
+    if rec is not None:
+        rec.metrics.gauge("spill.bytes_spilled", stats.bytes_spilled)
+        rec.metrics.gauge("spill.pairs", stats.pairs)
+        rec.metrics.gauge("spill.rows_in", stats.rows_in)
+        rec.metrics.gauge("spill.rows_out", stats.rows_out)
+        rec.record_overflow(report)
     return SpillResult(store, ctx, partitioning, report, stats, out_schema)
 
 

@@ -1,0 +1,41 @@
+"""Unified runtime telemetry: spans, metrics, and collective audits.
+
+The observability layer for the whole operator stack (DESIGN.md §12):
+
+  * :func:`trace` / :func:`span` / :func:`traced` — a hierarchical span
+    recorder with host-clock honesty (``block_until_ready`` at span
+    close).  Off by default; when no collector is active every
+    instrumentation site in the repo is a single ``None`` check.
+  * :class:`Collector` ``.metrics`` — counters/gauges fed by runtime
+    facts (rows in/out, overflow labels, spill bytes, scan pruning) and
+    by static program audits (:mod:`.audit`: jaxpr + compiled HLO
+    collective counts and payload bytes).
+  * :func:`export_chrome_trace` / :func:`metrics_snapshot` — Perfetto
+    trace JSON and the flat dump ``benchmarks/run.py`` attaches to
+    bench records.
+
+Typical session::
+
+    from repro import telemetry
+
+    with telemetry.trace() as rec:
+        df = lazy_pipeline.collect(telemetry=rec)
+    telemetry.export_chrome_trace(rec, "pipeline_trace.json")
+"""
+from .audit import (JAXPR_PRIMITIVES, compiled_collectives, hlo_collectives,
+                    jaxpr_collectives, jaxpr_exchanges, program_audit,
+                    top_collectives, trace_collectives)
+from .export import (chrome_trace_events, export_chrome_trace,
+                     export_metrics, metrics_snapshot)
+from .record import (Collector, Metrics, Span, current, operator_call, span,
+                     trace, traced, tracing, using)
+
+__all__ = [
+    "Collector", "Metrics", "Span", "current", "operator_call", "span",
+    "trace", "traced", "tracing", "using",
+    "JAXPR_PRIMITIVES", "compiled_collectives", "hlo_collectives",
+    "jaxpr_collectives", "jaxpr_exchanges", "program_audit",
+    "top_collectives", "trace_collectives",
+    "chrome_trace_events", "export_chrome_trace", "export_metrics",
+    "metrics_snapshot",
+]

@@ -1,0 +1,70 @@
+"""Exporters: Chrome ``trace_event`` JSON and a flat metrics dump.
+
+``export_chrome_trace`` writes the span tree in the Trace Event Format
+(complete ``"ph": "X"`` events), loadable by Perfetto / ``chrome://
+tracing``.  ``metrics_snapshot`` flattens a collector — metrics, plan
+audits, per-step observations — into one JSON-serializable dict that
+``benchmarks/run.py`` attaches to bench records, so a perf number ships
+with the collective counts and bytes that explain it.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+
+def _jsonable(v):
+    try:
+        json.dumps(v)
+        return v
+    except (TypeError, ValueError):
+        return repr(v)
+
+
+def chrome_trace_events(collector) -> List[Dict[str, Any]]:
+    """The collector's span tree as Trace Event Format complete events."""
+    events = []
+
+    def emit(span, depth):
+        events.append({
+            "name": span.name, "ph": "X", "cat": "repro",
+            "ts": round(span.t0_us, 3), "dur": round(span.dur_us, 3),
+            "pid": 0, "tid": 0,
+            "args": {k: _jsonable(v) for k, v in span.attrs.items()},
+        })
+        for c in span.children:
+            emit(c, depth + 1)
+
+    for root in collector.spans:
+        emit(root, 0)
+    return events
+
+
+def export_chrome_trace(collector, path: str) -> str:
+    """Write the trace to ``path`` (Perfetto-loadable); returns ``path``."""
+    doc = {"traceEvents": chrome_trace_events(collector),
+           "displayTimeUnit": "ms",
+           "otherData": {"collector": collector.name}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def metrics_snapshot(collector) -> Dict[str, Any]:
+    """Flat JSON-ready view: metrics + audits + per-plan-step facts."""
+    return {
+        "collector": collector.name,
+        "metrics": collector.metrics.as_dict(),
+        "audits": [dict(a) for a in collector.audits],
+        "plan_steps": {str(i): dict(v)
+                       for i, v in sorted(collector.plan_steps.items())},
+        "n_spans": sum(1 for _ in collector.all_spans()),
+    }
+
+
+def export_metrics(collector, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(metrics_snapshot(collector), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
