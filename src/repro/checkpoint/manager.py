@@ -9,6 +9,11 @@ time via ``device_put`` with the target ``NamedSharding``.
 Layout: ``<dir>/step_<n>/`` with one ``.npy`` per leaf + ``manifest.json``;
 a ``LATEST`` file is written last (atomic rename) so a crash mid-save never
 corrupts the recovery point.  Saves can run on a background thread.
+
+Integrity (DESIGN.md §13.5): each manifest leaf records a CRC32 of the
+host bytes at save time; ``restore`` re-hashes what it read and raises
+:class:`CheckpointIntegrityError` on bit-rot, dtype drift (manifest vs
+template — no more silent casting), or shape mismatch.
 """
 from __future__ import annotations
 
@@ -17,10 +22,17 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointIntegrityError(ValueError):
+    """A checkpoint leaf failed validation against its manifest (bad CRC,
+    dtype drift, or shape mismatch).  Subclasses ``ValueError`` so callers
+    written against the old shape-check contract keep working."""
 
 
 def _leaf_paths(tree):
@@ -74,7 +86,8 @@ class CheckpointManager:
                 np.save(os.path.join(tmp, fname), arr)
                 manifest["leaves"].append(
                     {"name": name, "file": fname,
-                     "shape": list(arr.shape), "dtype": str(arr.dtype)})
+                     "shape": list(arr.shape), "dtype": str(arr.dtype),
+                     "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF})
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             if os.path.exists(final):
@@ -114,13 +127,34 @@ class CheckpointManager:
         names, leaves, treedef = _leaf_paths(template)
         shard_leaves = (treedef.flatten_up_to(shardings)
                         if shardings is not None else [None] * len(leaves))
+        meta = {}
+        mpath = os.path.join(d, "manifest.json")
+        if os.path.exists(mpath):  # pre-§13.5 checkpoints lack one
+            with open(mpath) as f:
+                meta = {e["name"]: e for e in json.load(f)["leaves"]}
         out = []
         for name, tmpl, shd in zip(names, leaves, shard_leaves):
             arr = np.load(os.path.join(d, f"{name}.npy"))
             if tuple(arr.shape) != tuple(tmpl.shape):
-                raise ValueError(
+                raise CheckpointIntegrityError(
                     f"checkpoint leaf {name}: shape {arr.shape} != "
                     f"template {tmpl.shape}")
+            entry = meta.get(name)
+            if entry is not None:
+                want = np.dtype(tmpl.dtype)
+                if np.dtype(entry["dtype"]) != want:
+                    raise CheckpointIntegrityError(
+                        f"checkpoint leaf {name}: saved dtype "
+                        f"{entry['dtype']} != template {want}; refusing to "
+                        f"silently cast — resave or fix the template")
+                crc = entry.get("crc32")
+                if crc is not None:
+                    got = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+                    if got != crc:
+                        raise CheckpointIntegrityError(
+                            f"checkpoint leaf {name}: CRC mismatch "
+                            f"(manifest {crc:#010x}, file {got:#010x}) — "
+                            f"{os.path.join(d, name + '.npy')} is corrupt")
             if shd is not None:
                 out.append(jax.device_put(arr, shd))
             else:

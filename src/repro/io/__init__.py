@@ -16,14 +16,16 @@ the repo's static-shape Table/DistTable world (DESIGN.md §5):
 """
 from .compat import has_pyarrow, require_pyarrow
 from .schema import Field, Schema
-from .native import HptIntegrityError, read_hpt, read_hpt_header, write_hpt
+from .native import (CorruptFragmentError, HptIntegrityError, read_hpt,
+                     read_hpt_header, write_hpt)
 from .arrow import from_arrow, to_arrow
 from .dataset import Dataset, Fragment, open_dataset, write_dataset, write_dist_table
 from .scan import ColumnPredicate, ScanSource, ScanStats, pred, read_dataset
 
 __all__ = [
     "has_pyarrow", "require_pyarrow", "Field", "Schema",
-    "HptIntegrityError", "read_hpt", "read_hpt_header", "write_hpt",
+    "CorruptFragmentError", "HptIntegrityError", "read_hpt",
+    "read_hpt_header", "write_hpt",
     "from_arrow", "to_arrow",
     "Dataset", "Fragment", "open_dataset", "write_dataset",
     "write_dist_table",

@@ -39,7 +39,20 @@ MAGIC = b"HPT1"
 Stats = Optional[Tuple[float, float]]
 
 
-class HptIntegrityError(ValueError):
+class CorruptFragmentError(ValueError):
+    """A data fragment failed structural validation (truncation, CRC or
+    byte-count mismatch, schema drift, undecodable pages).
+
+    The base of the storage layer's corruption family — a ``ValueError``
+    subclass, so the shared :class:`~repro.resilience.FaultPolicy`
+    classifies it FATAL: corruption is deterministic, a retry re-reads
+    the same bad bytes.  The scan layer either surfaces it naming file +
+    fragment (``on_error="raise"``) or skips and records the fragment
+    (``on_error="quarantine"``).
+    """
+
+
+class HptIntegrityError(CorruptFragmentError):
     """A ``.hpt`` file is truncated or corrupted.
 
     Raised instead of decoding garbage when the container fails its
@@ -159,6 +172,20 @@ def read_hpt(path: str, columns: Optional[Sequence[str]] = None,
         for name in names:
             field = schema[name]
             start, nbytes = header["offsets"][name]
+            # eager consistency check BEFORE any byte is read: the header
+            # row count must agree with the recorded buffer extent, else
+            # the reshape below would surface a raw numpy error
+            trail = 1
+            for d in field.trailing:
+                trail *= int(d)
+            expected = int(n) * trail * field.np_dtype.itemsize
+            if nbytes != expected:
+                raise CorruptFragmentError(
+                    f"{path}: column {name!r} is inconsistent — the "
+                    f"header claims {n} rows ({expected} bytes of "
+                    f"{field.np_dtype}{field.trailing or ''}) but records "
+                    f"a {nbytes}-byte buffer; the header or data region "
+                    f"was corrupted — regenerate the file")
             f.seek(data_start + start)
             raw = f.read(nbytes)
             if len(raw) < nbytes:

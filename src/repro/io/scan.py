@@ -24,21 +24,36 @@ page:
     a following join/groupby on those keys elides its shuffle
     (DESIGN.md §4).
 
+Hardened reads (DESIGN.md §13.5): every fragment run passes through the
+``scan.read`` chaos-injection site and, with a
+:class:`~repro.resilience.FaultPolicy`, transient ``OSError``-family
+failures are retried with backoff.  Corruption — truncation, CRC or
+byte-count mismatch, schema drift, undecodable Parquet pages — is
+*never* retried: it surfaces as a typed
+:class:`~repro.io.native.CorruptFragmentError` naming the file and
+fragment, or, under ``on_error="quarantine"``, the bad fragment is
+skipped whole, counted in :class:`ScanStats`, and recorded in a
+``_hptmt_quarantine.json`` sidecar next to the dataset.
+
 Planning and I/O run on the host in numpy; rows enter jax (and the
 fixed-capacity static-shape world) only at table assembly.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import operator as _op
+import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro import telemetry
 from repro.core.table import DistTable, Partitioning, Table
+from repro.resilience import faults
 from .dataset import Dataset, Fragment, open_dataset
+from .native import CorruptFragmentError
 
 _OPS = {"<": _op.lt, "<=": _op.le, ">": _op.gt, ">=": _op.ge,
         "==": _op.eq, "!=": _op.ne}
@@ -112,6 +127,8 @@ class ScanStats:
     rows_scanned: int = 0      # materialized from surviving fragments
     rows_selected: int = 0     # after the residual predicate
     rows_overflowed: int = 0   # dropped by the §2 capacity contract
+    fragments_quarantined: int = 0  # corrupt fragments skipped (opt-in)
+    rows_quarantined: int = 0       # metadata rows of those fragments
 
     def as_report(self):
         """This scan's overflow as an :class:`~repro.core.report.OverflowReport`
@@ -129,13 +146,20 @@ class ScanSource:
                  columns: Optional[Sequence[str]] = None,
                  predicate=None, capacity: Optional[int] = None,
                  bucket_factor: float = 1.0,
-                 allow_narrowing: bool = False):
+                 allow_narrowing: bool = False,
+                 on_error: str = "raise", policy=None):
+        if on_error not in ("raise", "quarantine"):
+            raise ValueError(f"on_error={on_error!r}; expected 'raise' "
+                             f"or 'quarantine'")
         if isinstance(dataset, str):
             dataset = open_dataset(dataset)
         self.dataset = dataset
         self.ctx = ctx
         self.predicate = _normalize_predicate(predicate)
         self.allow_narrowing = allow_narrowing
+        self.on_error = on_error
+        self.policy = policy  # optional FaultPolicy: retry transient reads
+        self.quarantined: List[Dict] = []
         schema = dataset.schema
         self.out_columns: Tuple[str, ...] = (
             tuple(columns) if columns is not None else schema.names)
@@ -229,17 +253,32 @@ class ScanSource:
         self.stats.rows_scanned = 0
         self.stats.rows_selected = 0
         self.stats.rows_overflowed = 0
+        self.stats.fragments_quarantined = 0
+        self.stats.rows_quarantined = 0
+        self.quarantined = []
 
-    def _load_run(self, frags: Sequence[Fragment]
-                  ) -> Tuple[Dict[str, np.ndarray], int]:
-        """Load consecutive fragments of ONE file in a single read.
+    def _validate_run(self, frags: Sequence[Fragment],
+                      cols: Dict[str, np.ndarray]) -> None:
+        """Schema-drift check: a fragment whose on-disk dtypes disagree
+        with the dataset schema corrupts downstream identity contracts
+        (hash layouts, bit-exact parity) — typed error, never a silent
+        cast."""
+        schema = self.dataset.schema
+        for name in self.read_columns:
+            want = schema[name].np_dtype
+            if cols[name].dtype != want:
+                raise CorruptFragmentError(
+                    f"{frags[0].path}: column {name!r} drifted to dtype "
+                    f"{cols[name].dtype} (dataset schema says {want}) — "
+                    f"the fragment was rewritten with a different schema")
 
-        Parquet row groups of the same shard file batch into one
-        ``read_row_groups`` call — one file open / footer parse per run,
-        not per fragment.
-        """
-        with telemetry.span("io.scan.read", path=frags[0].path,
-                            fragments=len(frags)) as sp:
+    def _read_fragments(self, frags: Sequence[Fragment]
+                        ) -> Tuple[Dict[str, np.ndarray], int]:
+        """One physical read (+ validation), retried under the policy
+        for transient failures; the ``scan.read`` injection site fires
+        inside the retry loop so injected one-shot faults recover."""
+        def read():
+            faults.fire("scan.read", path=frags[0].path)
             if frags[0].format == "hpt":
                 from .native import read_hpt
 
@@ -250,6 +289,70 @@ class ScanSource:
                 cols, n = read_row_groups(frags[0].path,
                                           [f.row_group for f in frags],
                                           self.read_columns)
+            self._validate_run(frags, cols)
+            return cols, n
+
+        if self.policy is not None:
+            return self.policy.run(read, site="scan.read")
+        return read()
+
+    def _quarantine(self, frags: Sequence[Fragment],
+                    err: Exception) -> None:
+        """Record a corrupt run and skip it whole (opt-in data loss with
+        a full audit trail: stats counters, telemetry, sidecar)."""
+        rows = sum(f.rows for f in frags)
+        self.stats.fragments_quarantined += len(frags)
+        self.stats.rows_quarantined += rows
+        self.quarantined.append({
+            "path": frags[0].path,
+            "fragments": [f.file_index if f.row_group is None
+                          else f.row_group for f in frags],
+            "rows": int(rows), "error": str(err)})
+
+    def _write_quarantine_manifest(self) -> None:
+        """Sidecar audit record next to the dataset (atomic, best-effort:
+        an unwritable dataset dir must not fail the scan itself)."""
+        path = os.path.join(self.dataset.root, "_hptmt_quarantine.json")
+        try:
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"quarantined": self.quarantined}, f, indent=1)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+
+    def _load_run(self, frags: Sequence[Fragment]
+                  ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Load consecutive fragments of ONE file in a single read.
+
+        Parquet row groups of the same shard file batch into one
+        ``read_row_groups`` call — one file open / footer parse per run,
+        not per fragment.  Corruption surfaces as a typed
+        :class:`CorruptFragmentError` naming file + fragments, or the
+        run is quarantined when the scan opted in.
+        """
+        with telemetry.span("io.scan.read", path=frags[0].path,
+                            fragments=len(frags)) as sp:
+            try:
+                cols, n = self._read_fragments(frags)
+            except (ValueError, KeyError) as e:
+                # the corruption family: CorruptFragmentError subclasses
+                # (hpt integrity / byte counts / schema drift), pyarrow's
+                # ArrowInvalid (a ValueError), missing-column KeyErrors
+                err = e if isinstance(e, CorruptFragmentError) else \
+                    CorruptFragmentError(
+                        f"{frags[0].path}: fragment(s) "
+                        f"{[f.row_group for f in frags]} failed to decode "
+                        f"({type(e).__name__}: {e})")
+                if self.on_error != "quarantine":
+                    raise err from e
+                self._quarantine(frags, err)
+                sp.attrs["quarantined"] = len(frags)
+                schema = self.dataset.schema
+                cols = {c: np.zeros((0,) + schema[c].trailing,
+                                    schema[c].np_dtype)
+                        for c in self.read_columns}
+                n = 0
             self.stats.rows_scanned += n
             sp.attrs["rows_scanned"] = n
             if self.predicate:
@@ -315,6 +418,8 @@ class ScanSource:
             sp.block(dt)
             sp.attrs["rows"] = self.stats.rows_selected
             sp.attrs["overflow"] = overflow
+        if self.quarantined:
+            self._write_quarantine_manifest()
         rec = telemetry.current()
         if rec is not None:
             rec.record_scan(self.stats)
@@ -364,11 +469,13 @@ class ScanSource:
 def read_dataset(path: str, *, ctx, columns: Optional[Sequence[str]] = None,
                  predicate=None, capacity: Optional[int] = None,
                  bucket_factor: float = 1.0, allow_narrowing: bool = False,
+                 on_error: str = "raise", policy=None,
                  ) -> Tuple[DistTable, int, ScanStats]:
     """One-call scan: ``(DistTable, overflow, stats)``."""
     src = ScanSource(path, ctx=ctx, columns=columns, predicate=predicate,
                      capacity=capacity, bucket_factor=bucket_factor,
-                     allow_narrowing=allow_narrowing)
+                     allow_narrowing=allow_narrowing, on_error=on_error,
+                     policy=policy)
     dt, overflow = src.to_dist_table()
     return dt, overflow, src.stats
 

@@ -70,13 +70,20 @@ def source(table: DistTable, name: str = "table") -> LogicalNode:
 
 
 def scan(dataset, *, columns=None, predicate=None, capacity=None,
-         bucket_factor: float = 1.0,
-         allow_narrowing: bool = False) -> LogicalNode:
-    """Lazy dataset scan; column/predicate pushdown lands here."""
+         bucket_factor: float = 1.0, allow_narrowing: bool = False,
+         on_error: str = "raise") -> LogicalNode:
+    """Lazy dataset scan; column/predicate pushdown lands here.
+
+    ``on_error="quarantine"`` opts the physical scan into skipping
+    corrupt fragments (recorded in stats + sidecar) instead of raising.
+    """
     from repro.io.dataset import open_dataset
 
     if isinstance(dataset, str):
         dataset = open_dataset(dataset)
+    if on_error not in ("raise", "quarantine"):
+        raise ValueError(f"scan on_error={on_error!r}; expected 'raise' "
+                         f"or 'quarantine'")
     names = dataset.schema.names
     out = tuple(columns) if columns is not None else tuple(names)
     _check_columns(out, names, "scan columns=")
@@ -85,7 +92,8 @@ def scan(dataset, *, columns=None, predicate=None, capacity=None,
     return LogicalNode("scan", (), {
         "dataset": dataset, "columns": out, "predicate": preds,
         "capacity": capacity, "bucket_factor": bucket_factor,
-        "allow_narrowing": allow_narrowing}, tuple(sorted(out)))
+        "allow_narrowing": allow_narrowing, "on_error": on_error},
+        tuple(sorted(out)))
 
 
 # -- row / column ops -------------------------------------------------------

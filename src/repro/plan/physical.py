@@ -121,12 +121,19 @@ def _restamp(dt: DistTable, part) -> DistTable:
 
 @dataclasses.dataclass(frozen=True)
 class PlanStep:
-    """One physical operator: strategy + predicted AllToAll count."""
+    """One physical operator: strategy + predicted AllToAll count.
+
+    ``stage`` marks an exchange boundary — a step whose strategy moves
+    rows between shards (pre-clamp, so single-shard runs keep the same
+    stage structure).  Stage steps are where ``collect(policy=...)``
+    commits lineage checkpoints (DESIGN.md §13.2).
+    """
     index: int
     op: str
     strategy: str
     a2a: int
     detail: str = ""
+    stage: bool = False
 
 
 class PhysicalPlan:
@@ -146,6 +153,11 @@ class PhysicalPlan:
         self._input_specs: List[Tuple[str, object]] = []
         self._materialized: Optional[Tuple[DistTable, ...]] = None
         self.scan_overflow = 0
+        # resilience hook: when set (collect(policy=...)), stage-boundary
+        # steps route through it — restore a committed snapshot (skipping
+        # the whole subtree) or run + commit.  None (the default) keeps
+        # the executed program byte-identical to the hookless one.
+        self.stage_hook = None
         run, layout = self._lower(root)
         self.out_layout = layout
         self._run = run
@@ -177,9 +189,11 @@ class PhysicalPlan:
     # -- lowering ----------------------------------------------------------
     def _step(self, op: str, strategy: str, a2a: int,
               detail: str = "") -> PlanStep:
+        stage = a2a > 0  # exchange boundary — judged before the clamp so
+        # a 1-shard run checkpoints at the same stages as a 4-shard one
         if self.ctx.n_shards == 1:
             a2a = 0  # single shard: every exchange is local
-        s = PlanStep(len(self.steps), op, strategy, a2a, detail)
+        s = PlanStep(len(self.steps), op, strategy, a2a, detail, stage)
         self.steps.append(s)
         return s
 
@@ -187,7 +201,30 @@ class PhysicalPlan:
         run, layout = getattr(self, f"_lower_{node.kind}")(node)
         # every _lower_* appends its own step LAST, so steps[-1] here is
         # the node just lowered (children were appended before it)
-        return self._instrument(run, self.steps[-1], layout), layout
+        step = self.steps[-1]
+        run = self._instrument(run, step, layout)
+        return self._resilient(run, step, layout), layout
+
+    def _resilient(self, run: Callable, step: PlanStep,
+                   layout: Layout) -> Callable:
+        """Per-node fault-injection + stage-checkpoint wrapper.
+
+        Always fires the ``plan.step.<idx>`` chaos site (a cheap no-op
+        unless a fault is armed).  With a ``stage_hook`` installed and
+        the step at an exchange boundary, the hook decides: restore a
+        committed snapshot — the child closures never run, so a resumed
+        trace contains only the suffix — or run and commit.
+        """
+        from repro.resilience import faults
+
+        def wrapped(tables):
+            faults.fire(f"plan.step.{step.index}")
+            hook = self.stage_hook
+            if hook is None or not step.stage:
+                return run(tables)
+            return hook(step, layout, lambda: run(tables))
+
+        return wrapped
 
     def _instrument(self, run: Callable, step: PlanStep,
                     layout: Layout) -> Callable:
@@ -235,7 +272,8 @@ class PhysicalPlan:
         src = ScanSource(p["dataset"], ctx=self.ctx, columns=p["columns"],
                          predicate=p["predicate"], capacity=p["capacity"],
                          bucket_factor=p["bucket_factor"],
-                         allow_narrowing=p["allow_narrowing"])
+                         allow_narrowing=p["allow_narrowing"],
+                         on_error=p.get("on_error", "raise"))
         idx = len(self._input_specs)
         self._input_specs.append(("scan", src))
         layout = _from_stamp(src.partitioning)

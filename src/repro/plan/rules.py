@@ -201,7 +201,8 @@ def _push_filter(node: LogicalNode, fired: List[str]) -> LogicalNode:
             predicate=child.payload["predicate"] + tuple(push),
             capacity=child.payload["capacity"],
             bucket_factor=child.payload["bucket_factor"],
-            allow_narrowing=child.payload["allow_narrowing"])
+            allow_narrowing=child.payload["allow_narrowing"],
+            on_error=child.payload["on_error"])
         rest = tuple(p for p in pred if p not in push)
         return L.filter_(new_scan, rest) if rest else new_scan
 
@@ -282,7 +283,8 @@ def _push_projection(node: LogicalNode, req: Set[str],
                           predicate=node.payload["predicate"],
                           capacity=node.payload["capacity"],
                           bucket_factor=node.payload["bucket_factor"],
-                          allow_narrowing=node.payload["allow_narrowing"])
+                          allow_narrowing=node.payload["allow_narrowing"],
+                          on_error=node.payload["on_error"])
         return node
     if node.kind == "source":
         return node

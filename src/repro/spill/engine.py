@@ -463,7 +463,8 @@ def spill_join(left, right, keys: Sequence[str], *, ctx: HPTMTContext,
                budget_rows: int, how: str = "inner", method: str = "auto",
                max_matches: int = 1, max_probes: Optional[int] = None,
                workdir: Optional[str] = None,
-               report: Optional[OverflowReport] = None) -> SpillResult:
+               report: Optional[OverflowReport] = None,
+               policy=None) -> SpillResult:
     """Out-of-core equi-join under a per-shard ``budget_rows`` memory cap.
 
     Both operands are hash-partitioned to disk on ``keys``; each
@@ -474,7 +475,7 @@ def spill_join(left, right, keys: Sequence[str], *, ctx: HPTMTContext,
     """
     report = report if report is not None else OverflowReport()
     keys = tuple(keys)
-    store = SpillStore(workdir)
+    store = SpillStore(workdir, policy=policy)
     try:
         n_parts = plan_partitions(_total_rows_or_none(left, right),
                                   ctx.n_shards, budget_rows)
@@ -537,7 +538,8 @@ def spill_join(left, right, keys: Sequence[str], *, ctx: HPTMTContext,
 def spill_groupby(src, keys: Sequence[str],
                   aggs: Sequence[Tuple[str, str]], *, ctx: HPTMTContext,
                   budget_rows: int, workdir: Optional[str] = None,
-                  report: Optional[OverflowReport] = None) -> SpillResult:
+                  report: Optional[OverflowReport] = None,
+                  policy=None) -> SpillResult:
     """Out-of-core groupby-aggregate under a per-shard memory budget.
 
     Each key lives in exactly one spill partition, so per-partition
@@ -545,7 +547,7 @@ def spill_groupby(src, keys: Sequence[str],
     """
     report = report if report is not None else OverflowReport()
     keys = tuple(keys)
-    store = SpillStore(workdir)
+    store = SpillStore(workdir, policy=policy)
     try:
         n_parts = plan_partitions(_total_rows_or_none(src), ctx.n_shards,
                                   budget_rows)
@@ -594,7 +596,8 @@ def spill_groupby(src, keys: Sequence[str],
 def spill_window(src, partition_by, order_by, aggs, *, ctx: HPTMTContext,
                  budget_rows: int, rows: Optional[int] = None,
                  ascending=True, workdir: Optional[str] = None,
-                 report: Optional[OverflowReport] = None) -> SpillResult:
+                 report: Optional[OverflowReport] = None,
+                 policy=None) -> SpillResult:
     """Out-of-core windowed aggregation under a per-shard memory budget.
 
     Partitions hash the PARTITION BY keys only (one window partition
@@ -605,7 +608,7 @@ def spill_window(src, partition_by, order_by, aggs, *, ctx: HPTMTContext,
     report = report if report is not None else OverflowReport()
     pkeys = (partition_by,) if isinstance(partition_by, str) \
         else tuple(partition_by)
-    store = SpillStore(workdir)
+    store = SpillStore(workdir, policy=policy)
     try:
         it = iter_host_chunks(src)
         try:

@@ -13,17 +13,20 @@ so a reader can never decode a torn run — interrupted writes either leave
 a ``*.tmp`` that :meth:`SpillStore.close` / the engine's error path
 removes, or raise :class:`~repro.io.native.HptIntegrityError` at read.
 
-Fault injection: the ``HPTMT_SPILL_FAULT`` env knob (``"<point>:<n>"``)
-makes the ``n``-th run write fail — ``disk_full`` raises ``ENOSPC``
-before any byte lands; ``partial_write`` tears the tmp file mid-write and
-then fails, simulating a crash.  Both surface as the named
-:class:`SpillWriteError` with the tmp file cleaned up, and the injector
-disarms after firing so a retry under the same environment succeeds —
-exactly the story the fault tests assert.
+Fault injection: every run write passes through the unified chaos
+registry (:mod:`repro.resilience.faults`) at site ``"spill.write"``.
+The legacy ``HPTMT_SPILL_FAULT`` env knob (``"<point>:<n>"``) keeps its
+exact semantics as a back-compat alias: the ``n``-th run write fails —
+``disk_full`` raises ``ENOSPC`` before any byte lands; ``partial_write``
+tears the tmp file mid-write and then fails, simulating a crash.  Both
+surface as the named :class:`SpillWriteError` with the tmp file cleaned
+up, and the injector disarms after firing so a retry under the same
+environment succeeds — exactly the story the fault tests assert.  A
+:class:`~repro.resilience.FaultPolicy` passed to the store retries the
+write in place (the run's columns are still in memory) with backoff.
 """
 from __future__ import annotations
 
-import errno
 import os
 import shutil
 import tempfile
@@ -32,9 +35,11 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.io.native import read_hpt, write_hpt
+from repro.resilience import faults as _faults
+from repro.resilience.policy import RetryBudgetExceeded
 
-FAULT_ENV = "HPTMT_SPILL_FAULT"
-FAULT_POINTS = ("disk_full", "partial_write")
+FAULT_ENV = _faults.SPILL_FAULT_ENV
+FAULT_POINTS = _faults.SPILL_FAULT_POINTS
 
 
 class SpillError(RuntimeError):
@@ -49,48 +54,19 @@ class SpillWriteError(SpillError):
     """
 
 
-# one-shot injector state: {"spec": armed env value, "remaining": countdown}
-# — "fired" is remembered per spec so a retry under the same env succeeds
-_fault: Dict[str, object] = {"spec": None, "remaining": None}
-
-
 def reset_fault_injection() -> None:
-    """Re-arm the fault injector from the current environment (tests)."""
-    _fault["spec"] = None
-    _fault["remaining"] = None
+    """Re-arm the fault injector from the current environment (tests).
 
-
-def _parse_fault(spec: str) -> Tuple[str, int]:
-    point, _, count = spec.partition(":")
-    if point not in FAULT_POINTS:
-        raise ValueError(
-            f"{FAULT_ENV}={spec!r}: unknown fault point {point!r}; "
-            f"expected one of {FAULT_POINTS}")
-    return point, int(count) if count else 1
+    Delegates to the unified registry's :func:`repro.resilience.faults.
+    reset` — one-shot "fired" memory is per armed spec there, so a retry
+    under an unchanged environment succeeds.
+    """
+    _faults.reset()
 
 
 def _check_fault(path: str) -> None:
-    """Fire the armed fault (once) at this run-write site."""
-    spec = os.environ.get(FAULT_ENV)
-    if not spec:
-        return
-    if _fault["spec"] != spec:  # env changed since last arm → re-arm
-        point, n = _parse_fault(spec)
-        _fault["spec"] = spec
-        _fault["remaining"] = n
-    if _fault["remaining"] is None or _fault["remaining"] <= 0:
-        return  # already fired for this spec — retries succeed
-    _fault["remaining"] -= 1
-    if _fault["remaining"] > 0:
-        return
-    point, _ = _parse_fault(spec)
-    _fault["remaining"] = 0  # disarm
-    if point == "disk_full":
-        raise OSError(errno.ENOSPC, "injected disk-full", path)
-    # partial_write: tear a half-written tmp file, then die mid-write
-    with open(path + ".tmp", "wb") as f:
-        f.write(b"HPT1\x00")
-    raise OSError(errno.EIO, "injected partial write", path)
+    """Fire any armed ``spill.write`` fault (once) at this write site."""
+    _faults.fire("spill.write", path=path)
 
 
 class SpillStore:
@@ -101,7 +77,8 @@ class SpillStore:
     operation that created it unless the caller opts into ``keep=True``.
     """
 
-    def __init__(self, workdir: Optional[str] = None, *, keep: bool = False):
+    def __init__(self, workdir: Optional[str] = None, *, keep: bool = False,
+                 policy=None):
         if workdir is None:
             self.root = tempfile.mkdtemp(prefix="hptmt-spill-")
             self._owns_root = True
@@ -110,6 +87,7 @@ class SpillStore:
             self.root = workdir
             self._owns_root = False
         self.keep = keep
+        self.policy = policy  # optional FaultPolicy: retry run writes
         # (tag, q, s) -> list of (path, rows)
         self._runs: Dict[Tuple[str, int, int], List[Tuple[str, int]]] = {}
         self._seq = 0
@@ -128,10 +106,17 @@ class SpillStore:
         path = os.path.join(
             self.root, f"{tag}-q{q:05d}-s{s:03d}-{self._seq:05d}.hpt")
         self._seq += 1
-        try:
+
+        def attempt():
             _check_fault(path)
-            header = write_hpt(path, cols, num_rows)
-        except OSError as e:
+            return write_hpt(path, cols, num_rows)
+
+        try:
+            if self.policy is not None:
+                header = self.policy.run(attempt, site="spill.write")
+            else:
+                header = attempt()
+        except (OSError, RetryBudgetExceeded) as e:
             for leftover in (path + ".tmp", path):
                 try:
                     os.remove(leftover)
@@ -139,7 +124,8 @@ class SpillStore:
                     pass
             raise SpillWriteError(
                 f"spill run {os.path.basename(path)} failed to write "
-                f"({e.strerror or e}); scratch dir {self.root} — free disk "
+                f"({getattr(e, 'strerror', None) or e}); "
+                f"scratch dir {self.root} — free disk "
                 f"space or point the spill workdir elsewhere and retry"
             ) from e
         nbytes = sum(n for _, n in header["offsets"].values())

@@ -7,16 +7,27 @@ tasks are journaled so a crashed run resumes from the last barrier instead
 of recomputing — the same contract a Pegasus/Kubeflow deployment gives the
 multi-pod trainer, scaled down to one process for this container.
 
+Retries route through the shared :class:`~repro.resilience.FaultPolicy`
+(DESIGN.md §13.4): transient failures back off exponentially with
+deterministic jitter; typed-fatal exceptions (``ValueError``/
+``TypeError``/...) fail fast instead of burning the budget on a
+deterministic bug.  The journal records a content hash per completed
+task (its name + dependency edges), so resuming against a *changed* DAG
+is detected and refused instead of silently skipping different work.
+
 Also hosts the straggler monitor: per-step wall-time dispersion tracking
 that a production launcher would use to evict/replace slow hosts.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.resilience.policy import FaultPolicy, RetryBudgetExceeded
 
 
 @dataclasses.dataclass
@@ -25,6 +36,7 @@ class Task:
     fn: Callable[..., Any]
     deps: Sequence[str] = ()
     retries: int = 2
+    policy: Optional[FaultPolicy] = None  # overrides retries/backoff
     # results of deps are passed as kwargs keyed by dep name
 
 
@@ -32,11 +44,24 @@ class WorkflowError(RuntimeError):
     pass
 
 
+def _task_hash(name: str, deps: Sequence[str]) -> str:
+    """Journal identity of a task: its name + dependency edges.
+
+    Deliberately NOT the function body — a restarted process rebuilds
+    the DAG with fresh closures (different bytecode addresses, same
+    work), and those must still match their journal entries.
+    """
+    text = json.dumps([name, sorted(deps)])
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
 class WorkflowEngine:
-    def __init__(self, journal_path: Optional[str] = None):
+    def __init__(self, journal_path: Optional[str] = None,
+                 policy: Optional[FaultPolicy] = None):
         self.tasks: Dict[str, Task] = {}
         self.journal_path = journal_path
-        self._done: Dict[str, bool] = {}
+        self.policy = policy  # engine-wide default retry policy
+        self._done: Dict[str, Any] = {}
         if journal_path and os.path.exists(journal_path):
             with open(journal_path) as f:
                 self._done = json.load(f)
@@ -63,22 +88,35 @@ class WorkflowEngine:
         order = self._topo_order()
         for name in order:
             task = self.tasks[name]
-            if self._done.get(name):
+            digest = _task_hash(name, task.deps)
+            done = self._done.get(name)
+            if done:
+                # Dict entries carry a content hash; a mismatch means the
+                # journal describes a *different* DAG (renamed deps, edited
+                # edges) and silently skipping would corrupt the resume.
+                # Legacy `true` entries predate hashing and skip as before.
+                if isinstance(done, dict) and done.get("hash") != digest:
+                    raise WorkflowError(
+                        f"stale journal: task {name} was journaled with a "
+                        f"different definition (hash {done.get('hash')!r} != "
+                        f"{digest!r}); delete {self.journal_path} to rerun")
                 continue
             kwargs = {d: results.get(d) for d in task.deps}
-            err: Optional[Exception] = None
-            for attempt in range(task.retries + 1):
-                try:
-                    results[name] = task.fn(**kwargs)
-                    err = None
-                    break
-                except Exception as e:  # noqa: BLE001 — retry any failure
-                    err = e
-            if err is not None:
+            pol = task.policy or self.policy or FaultPolicy(
+                max_retries=task.retries, backoff_base=0.005,
+                backoff_max=0.1)
+            try:
+                results[name] = pol.run(lambda: task.fn(**kwargs),
+                                        site=f"workflow.{name}")
+            except RetryBudgetExceeded as e:
                 raise WorkflowError(
-                    f"task {name} failed after {task.retries + 1} attempts"
-                ) from err
-            self._done[name] = True
+                    f"task {name} failed after {pol.max_retries + 1} attempts"
+                ) from e
+            except Exception as e:  # typed-fatal: don't mask the bug class
+                raise WorkflowError(
+                    f"task {name} raised non-retryable "
+                    f"{type(e).__name__}: {e}") from e
+            self._done[name] = {"hash": digest}
             self._journal()
         return results
 
