@@ -629,6 +629,20 @@ def bench_telemetry_overhead(n: int = 500_000, rounds: int = 15):
               f"budget", flush=True)
 
 
+def write_ledger(path: str) -> None:
+    """Append each case's record to the cross-run JSONL ledger
+    (``scripts/perf_report.py`` renders the per-fingerprint deltas)."""
+    from repro.telemetry import ledger
+
+    for name, us, derived, rss in ROWS:
+        rec = ledger.bench_record(
+            name, us, derived=derived,
+            peak_rss_mb=None if rss != rss else round(rss, 1),
+            telemetry=TELEMETRY.get(name))
+        ledger.append(path, rec)
+    print(f"# appended {len(ROWS)} record(s) to {path}", flush=True)
+
+
 def write_telemetry(path: str) -> None:
     """The per-bench collective audits as one JSON artifact (CI uploads
     this next to the perf record)."""
@@ -722,6 +736,10 @@ def main(argv=None) -> None:
                    help="also write the per-bench collective audits "
                         "(compiled-HLO counts/bytes, roofline fraction) "
                         "as a standalone JSON artifact")
+    p.add_argument("--ledger", metavar="LEDGER.jsonl",
+                   help="append one run-history record per case to this "
+                        "JSONL ledger (keyed bench:<case>) for "
+                        "scripts/perf_report.py cross-run deltas")
     p.add_argument("--compare-files", nargs=2, metavar=("FRESH", "BASELINE"),
                    help="compare two existing records (no benches run): "
                         "the like-for-like gate — both sides same sizes, "
@@ -753,6 +771,8 @@ def main(argv=None) -> None:
     if args.spill_only:
         bench_spill_join()
         write_json(args.out, merge=True)
+        if args.ledger:
+            write_ledger(args.ledger)
         if RSS_VIOLATIONS:
             print(f"# FAILED: peak RSS over the {SPILL_RSS_BUDGET_MB:.0f}MB "
                   "budget: " + ", ".join(f"{n}={p:.0f}MB"
@@ -796,6 +816,8 @@ def main(argv=None) -> None:
     write_json(args.out)
     if args.telemetry_out:
         write_telemetry(args.telemetry_out)
+    if args.ledger:
+        write_ledger(args.ledger)
     print(f"# {len(ROWS)} benchmarks complete")
     failures = 0
     if base is not None:

@@ -253,6 +253,44 @@ def main():
         print(f"quarantined scan: {len(partial)} rows kept, "
               f"{int(rec4.metrics.counters['scan.rows_quarantined'])} "
               f"rows quarantined (see _hptmt_quarantine.json)")
+
+        # --- 10. the query observatory: q-errors, memory, ledger (§14) -----
+        # Every plan step carries predicted est_rows/est_bytes next to its
+        # observed rows/RSS delta; collect(ledger=...) appends one record
+        # per run keyed by plan fingerprint, and scripts/perf_report.py
+        # flags cross-run regressions. Slow the second run with a
+        # chaos-armed retry (~1.2s backoff) so the report flags it.
+        ledger_path = os.path.join(root, "runs.jsonl")
+        with telemetry.trace("observatory") as rec5:
+            lazy.collect(telemetry=rec5, jit=False, ledger=ledger_path,
+                         qerror_threshold=4.0)   # strict cardinality audit
+        print(f"cardinality audit: "
+              f"{int(rec5.metrics.gauges['cardinality.steps_audited'])} "
+              f"steps audited, max q-error "
+              f"{rec5.metrics.gauges['cardinality.max_qerror']:.2f}")
+        print(lazy.explain(analyze=True)
+              .split("predicted collectives")[0]
+              .split("== physical plan ==")[1])  # est_rows/qerr/rss= lines
+
+        arm("plan.step.0", "io_error")           # chaos: first step fails
+        lazy.collect(ledger=ledger_path, policy=FaultPolicy(
+            max_retries=2, backoff_base=1.2, backoff_factor=1.0,
+            backoff_max=1.2, jitter=0.0))        # retried run is slower
+        faults.reset()
+
+        import subprocess
+        import sys as _sys
+        report = subprocess.run(
+            [_sys.executable,
+             os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "perf_report.py"),
+             ledger_path, "--gate"],
+            capture_output=True, text=True)
+        assert report.returncode == 1, "the slowed run must be flagged"
+        flagged = [ln for ln in report.stdout.splitlines()
+                   if "**TIME**" in ln]
+        print("perf report flagged the chaos-slowed run:")
+        print("\n".join(flagged))
     print("quickstart OK")
 
 

@@ -1,0 +1,148 @@
+"""Cross-run performance report over a telemetry ledger (DESIGN.md §14.3).
+
+Reads the JSONL ledger that ``LazyFrame.collect(ledger=...)`` and
+``benchmarks/run.py --ledger`` append to, groups records by plan
+fingerprint, and renders a markdown report comparing each fingerprint's
+LATEST run against its PREVIOUS one:
+
+  * wall-time delta — flagged as a regression past ``--time-threshold``
+    (default +30%, the same bar as the bench gate);
+  * q-error drift — flagged when the max q-error grew by more than
+    ``--qerr-threshold``x (default 2x: the planner's estimates are
+    drifting out of contract even if the run is not yet slower).
+
+``--gate`` exits non-zero when anything is flagged, so CI can ride the
+report as a cheap cross-run screen; fingerprints with a single run
+render as "baseline" rows and never flag.
+
+Usage::
+
+    python scripts/perf_report.py LEDGER.jsonl [--out report.md] [--gate]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.telemetry import ledger  # noqa: E402
+
+TIME_THRESHOLD = 0.30   # latest wall_s may exceed previous by ≤30%
+QERR_THRESHOLD = 2.0    # latest max q-error may exceed previous by ≤2x
+
+
+def fingerprint_deltas(records: List[Dict[str, Any]], *,
+                       time_threshold: float = TIME_THRESHOLD,
+                       qerr_threshold: float = QERR_THRESHOLD
+                       ) -> List[Dict[str, Any]]:
+    """Per-fingerprint latest-vs-previous comparison rows, file order
+    (== time order for an append-only ledger) within each fingerprint."""
+    by_fp: Dict[str, List[Dict[str, Any]]] = {}
+    for r in records:
+        fp = r.get("fingerprint")
+        if fp:
+            by_fp.setdefault(fp, []).append(r)
+    rows = []
+    for fp in sorted(by_fp):
+        runs = by_fp[fp]
+        latest = runs[-1]
+        prev = runs[-2] if len(runs) > 1 else None
+        row: Dict[str, Any] = {
+            "fingerprint": fp, "kind": latest.get("kind", "?"),
+            "runs": len(runs), "wall_s": latest.get("wall_s"),
+            "prev_wall_s": prev.get("wall_s") if prev else None,
+            "max_qerror": latest.get("max_qerror"),
+            "prev_max_qerror": prev.get("max_qerror") if prev else None,
+            "time_delta": None, "qerr_drift": None, "flags": [],
+        }
+        if prev and prev.get("wall_s") and latest.get("wall_s") is not None:
+            delta = latest["wall_s"] / prev["wall_s"] - 1.0
+            row["time_delta"] = delta
+            if delta > time_threshold:
+                row["flags"].append("TIME")
+        if prev and prev.get("max_qerror") and latest.get("max_qerror"):
+            drift = latest["max_qerror"] / prev["max_qerror"]
+            row["qerr_drift"] = drift
+            if drift > qerr_threshold:
+                row["flags"].append("QERR")
+        rows.append(row)
+    return rows
+
+
+def _fmt_s(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    return f"{v * 1e3:.1f}ms" if v < 1.0 else f"{v:.2f}s"
+
+
+def _fmt_q(v: Optional[float]) -> str:
+    return "—" if v is None else f"{v:.2f}"
+
+
+def render_markdown(rows: List[Dict[str, Any]], *, path: str = "") -> str:
+    lines = ["# Performance report", ""]
+    if path:
+        lines += [f"Ledger: `{path}` — "
+                  f"{sum(r['runs'] for r in rows)} run(s), "
+                  f"{len(rows)} fingerprint(s).", ""]
+    lines += ["| fingerprint | kind | runs | prev wall | last wall | Δtime |"
+              " prev qerr | last qerr | drift | flags |",
+              "|---|---|---:|---:|---:|---:|---:|---:|---:|---|"]
+    for r in rows:
+        delta = ("baseline" if r["time_delta"] is None
+                 else f"{r['time_delta']:+.1%}")
+        drift = ("—" if r["qerr_drift"] is None
+                 else f"{r['qerr_drift']:.2f}x")
+        flags = " ".join(f"**{f}**" for f in r["flags"]) or "ok"
+        lines.append(
+            f"| `{r['fingerprint'][:20]}` | {r['kind']} | {r['runs']} "
+            f"| {_fmt_s(r['prev_wall_s'])} | {_fmt_s(r['wall_s'])} "
+            f"| {delta} | {_fmt_q(r['prev_max_qerror'])} "
+            f"| {_fmt_q(r['max_qerror'])} | {drift} | {flags} |")
+    flagged = [r for r in rows if r["flags"]]
+    lines.append("")
+    if flagged:
+        lines.append(f"**{len(flagged)} regression(s) flagged:** "
+                     + ", ".join(f"`{r['fingerprint'][:20]}` "
+                                 f"({'/'.join(r['flags'])})"
+                                 for r in flagged))
+    else:
+        lines.append("No regressions flagged.")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("ledger", help="JSONL ledger path")
+    p.add_argument("--out", help="write the markdown report here "
+                                 "(default: stdout only)")
+    p.add_argument("--time-threshold", type=float, default=TIME_THRESHOLD,
+                   help="relative wall-time slowdown flagged as regression")
+    p.add_argument("--qerr-threshold", type=float, default=QERR_THRESHOLD,
+                   help="max-q-error growth factor flagged as drift")
+    p.add_argument("--gate", action="store_true",
+                   help="exit non-zero when any fingerprint is flagged")
+    args = p.parse_args(argv)
+
+    records = ledger.read(args.ledger)
+    rows = fingerprint_deltas(records,
+                              time_threshold=args.time_threshold,
+                              qerr_threshold=args.qerr_threshold)
+    text = render_markdown(rows, path=args.ledger)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    flagged = sum(1 for r in rows if r["flags"])
+    if args.gate and flagged:
+        print(f"# GATE FAILED: {flagged} fingerprint(s) regressed",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

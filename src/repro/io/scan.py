@@ -423,6 +423,7 @@ class ScanSource:
         rec = telemetry.current()
         if rec is not None:
             rec.record_scan(self.stats)
+            telemetry.publish_pressure(rec, "scan")
         return dt, overflow
 
     def chunks(self):

@@ -99,7 +99,23 @@ def plan_annotations(rec) -> Dict[int, Dict]:
                        if c.name.startswith("plan.")
                        and c.name != "plan.collect")
         ann.setdefault(idx, {})["self_us"] = sp.dur_us - child_us
+        # SELF peak-rss growth: a monotone watermark charges a child's
+        # rise to every enclosing step, so subtract direct plan children
+        own = sp.attrs.get("peak_rss_delta_kb")
+        if own is not None:
+            child_kb = sum(c.attrs.get("peak_rss_delta_kb", 0.0)
+                           for c in sp.children
+                           if c.name.startswith("plan.")
+                           and c.name != "plan.collect")
+            ann[idx]["self_rss_kb"] = max(0.0, own - child_kb)
     return ann
+
+
+def _fmt_est(v) -> str:
+    """Deterministic short form of a row estimate (manifests only)."""
+    if v is None:
+        return "?"
+    return f"{round(float(v), 1):g}"
 
 
 def _fmt_annotation(a: Dict) -> str:
@@ -108,9 +124,32 @@ def _fmt_annotation(a: Dict) -> str:
         bits.append(f"time={a['self_us'] / 1e3:.3f}ms")
     if a.get("rows_out") is not None:
         bits.append(f"rows={a['rows_out']}")
+    if "qerr" in a:
+        bits.append(f"qerr={a['qerr']:.2f}")
     if "a2a_bytes" in a:
         bits.append(f"bytes={a['a2a_bytes']}")
+    if a.get("self_rss_kb"):
+        bits.append(f"rss=+{a['self_rss_kb']:.0f}KB")
     return "  [" + " ".join(bits) + "]" if bits else ""
+
+
+def _memory_footer(plan, annotations: Dict[int, Dict]) -> Optional[str]:
+    """Peak-memory attribution: predicted live bytes vs the observed
+    watermark growth, naming the step that grew the peak most."""
+    est_total = sum(s.est_bytes or 0 for s in plan.steps)
+    deltas = {i: a.get("self_rss_kb", 0.0)
+              for i, a in annotations.items()
+              if a.get("self_rss_kb") is not None}
+    if not deltas and not est_total:
+        return None
+    total_kb = sum(deltas.values())
+    line = (f"  memory: est_live={est_total / 1024:.0f}KB "
+            f"peak_rss_delta={total_kb:.0f}KB")
+    if deltas and max(deltas.values()) > 0:
+        top = max(deltas, key=deltas.get)
+        op = next((s.op for s in plan.steps if s.index == top), "?")
+        line += f" (top: {top}.{op} +{deltas[top]:.0f}KB)"
+    return line
 
 
 def render_physical(plan, annotations: Optional[Dict[int, Dict]] = None,
@@ -119,13 +158,17 @@ def render_physical(plan, annotations: Optional[Dict[int, Dict]] = None,
     for s in plan.steps:
         det = f"  -- {s.detail}" if s.detail else ""
         line = (f"  {s.index:2d}. {s.op:<12} {s.strategy:<24} "
-                f"all_to_all={s.a2a}{det}")
+                f"all_to_all={s.a2a} est_rows={_fmt_est(s.est_rows)}{det}")
         if annotations is not None and s.index in annotations:
             line += _fmt_annotation(annotations[s.index])
         lines.append(line)
     lines.append(f"  predicted collectives: {plan.predicted_collectives} "
                  f"all_to_all on {plan.ctx.n_shards} shards "
                  f"(output layout: {plan.out_layout.describe()})")
+    if annotations is not None:
+        footer = _memory_footer(plan, annotations)
+        if footer is not None:
+            lines.append(footer)
     if audit is not None:
         a2a_bytes = audit["observed_bytes_by_kind"].get("all-to-all", 0)
         lines.append(

@@ -139,7 +139,8 @@ class LazyFrame:
         return PhysicalPlan(root, self._ctx)
 
     def collect(self, *, strict: bool = True, jit: bool = True,
-                telemetry=None, policy=None):
+                telemetry=None, policy=None, qerror_threshold=None,
+                ledger=None):
         """Optimize, lower, run; returns an eager :class:`DataFrame`.
 
         One program executes the whole pipeline (``jit=True`` compiles
@@ -154,7 +155,18 @@ class LazyFrame:
         to nodes), publishes the plan-vs-observed collective audit
         (predicted == traced jaxpr == compiled HLO; a mismatch raises
         :class:`PlanAuditError` under ``strict=True``), and files the
-        predicted strategy of every step next to its measured facts.
+        predicted facts of every step (strategy, ``est_rows``,
+        ``est_bytes``) next to its measured ones.  Per-step q-errors
+        (DESIGN.md §14.1) are always recorded when observations exist;
+        ``qerror_threshold`` (a float) additionally ENFORCES them under
+        ``strict=True``: any step whose estimate misses observed rows by
+        more than the threshold raises :class:`~repro.telemetry.
+        cardinality.CardinalityAuditError`.
+
+        ``ledger`` names a JSONL file: the run appends one record keyed
+        by its plan fingerprint (wall time, metrics, q-errors, memory
+        watermark — DESIGN.md §14.3) for ``scripts/perf_report.py`` to
+        chart cross-run deltas.
 
         ``policy`` accepts a :class:`repro.resilience.FaultPolicy` and
         switches on fault-tolerant execution (DESIGN.md §13): scan reads
@@ -167,15 +179,23 @@ class LazyFrame:
         ``jit`` is ignored; without a policy this path adds nothing —
         no stage I/O, no extra tracing.
         """
+        import time
+
         import jax
 
         from repro.dataframe.frame import DataFrame
 
         root, _ = optimize(self._node)
         plan = PhysicalPlan(root, self._ctx)
+        fingerprint = None
+        if policy is not None or ledger is not None:
+            from repro.resilience import stages as S
+
+            fingerprint = S.plan_fingerprint(root, self._ctx)
+        t0 = time.perf_counter()
         if policy is not None:
-            out, ovs = self._collect_resilient(plan, root, policy,
-                                               telemetry)
+            out, ovs = self._collect_resilient(plan, policy, telemetry,
+                                               fingerprint)
         elif telemetry is not None:
             out, ovs = self._collect_audited(plan, telemetry, jit=jit,
                                              strict=strict)
@@ -183,20 +203,79 @@ class LazyFrame:
             inputs = plan.inputs()
             fn = jax.jit(plan.fn) if jit else plan.fn
             out, ovs = fn(*inputs)
+        wall_s = time.perf_counter() - t0
         report = OverflowReport().merge(self._report)
         report.add("plan.scan.capacity", plan.scan_overflow)
         for label, v in sorted(ovs.items()):
             report.add(f"plan.{label}", int(v))
         if telemetry is not None:
+            from repro.telemetry import cardinality as C
+
             telemetry.record_overflow(report)
+            C.record_qerrors(telemetry)
+        if ledger is not None:
+            from repro.telemetry import ledger as Led
+
+            Led.append(ledger, Led.collect_record(
+                telemetry, fingerprint=fingerprint, wall_s=wall_s))
         if strict and not report.is_exact():
             detail = ", ".join(f"{k}={v}" for k, v in report)
             raise OverflowError(
                 f"planned pipeline overflowed static capacity ({detail}) "
                 f"— re-run with larger capacities, or collect(strict=False)")
+        if telemetry is not None and strict and qerror_threshold is not None:
+            C.audit_cardinality(telemetry, qerror_threshold)
         return DataFrame(out, self._ctx, report)
 
-    def _collect_resilient(self, plan: PhysicalPlan, root, policy, rec):
+    def refine(self, rec) -> "LazyFrame":
+        """Re-optimize join order from OBSERVED cardinalities (opt-in).
+
+        ``rec`` is the collector of a prior ``collect(telemetry=rec,
+        jit=False)`` of THIS pipeline: physical steps are appended in
+        the same post-order the optimized logical tree walks, so step
+        ``i``'s observed ``rows_out`` belongs to post-order node ``i``.
+        Every inner join that opted into reordering (``reorder=True``)
+        has its swap decision re-taken from the observed input rows —
+        under the same rename-safety guard as the estimate-based rule —
+        and PINNED (``reorder=False``), so the estimate rule cannot undo
+        the observed decision on the next ``collect()``.  Joins without
+        observations (jitted collect, different pipeline) are left
+        untouched.  Parity holds by the same argument as the rewrite
+        rule: a swap only changes which side hashes first.
+        """
+        root, _ = optimize(self._node)
+        obs = {}
+        for i, node in enumerate(L.walk(root)):
+            rows = rec.plan_steps.get(i, {}).get("rows_out")
+            if rows is not None:
+                obs[id(node)] = int(rows)
+
+        def rebuild(node):
+            kids = tuple(rebuild(i) for i in node.inputs)
+            out = node if kids == node.inputs else node.with_inputs(*kids)
+            if node.kind != "join" or node.payload["how"] != "inner" \
+                    or not node.payload["reorder"]:
+                return out
+            lo = obs.get(id(node.inputs[0]))
+            ro = obs.get(id(node.inputs[1]))
+            if lo is None or ro is None:
+                return out
+            swap = lo < ro
+            if swap:
+                keys = node.payload["keys"]
+                left, right = node.inputs
+                dups = [c for c in left.schema
+                        if c in right.schema and c not in keys]
+                names = set(left.schema) | set(right.schema)
+                if any(f"{c}_r" in names for c in dups):
+                    return out  # rename would collide: keep as-is
+            return out.with_payload(swap=swap, reorder=False)
+
+        return LazyFrame(rebuild(root), self._ctx,
+                         OverflowReport().merge(self._report))
+
+    def _collect_resilient(self, plan: PhysicalPlan, policy, rec,
+                           fingerprint: str):
         """Run ``plan`` under ``policy``: scan retries, stage
         checkpoints at exchange boundaries, whole-plan retry, and
         resume-from-last-committed-stage on restart (DESIGN.md §13.2).
@@ -223,7 +302,6 @@ class LazyFrame:
             # durable dir they simply cannot survive a process death
             tmp_root = tempfile.mkdtemp(prefix="hptmt-stages-")
             ckpt_root = tmp_root
-        fingerprint = S.plan_fingerprint(root, self._ctx)
         ckpt = S.StageCheckpointer(ckpt_root, fingerprint)
         committed = set(ckpt.committed_stages())
         resumed_from = max(committed) if committed else None
@@ -237,7 +315,9 @@ class LazyFrame:
                     for s in plan.steps:
                         rec.observe_step(s.index, op=s.op,
                                          strategy=s.strategy,
-                                         predicted_a2a=s.a2a)
+                                         predicted_a2a=s.a2a,
+                                         est_rows=s.est_rows,
+                                         est_bytes=s.est_bytes)
                     if resumed_from is not None:
                         rec.metrics.gauge("recovery.resumed_from_stage",
                                           resumed_from)
@@ -267,7 +347,8 @@ class LazyFrame:
 
         for s in plan.steps:
             rec.observe_step(s.index, op=s.op, strategy=s.strategy,
-                             predicted_a2a=s.a2a)
+                             predicted_a2a=s.a2a, est_rows=s.est_rows,
+                             est_bytes=s.est_bytes)
         with T.using(rec):
             with rec.span("plan.collect", steps=len(plan.steps), jit=jit,
                           predicted_a2a=plan.predicted_collectives) as sp:

@@ -127,6 +127,11 @@ class PlanStep:
     rows between shards (pre-clamp, so single-shard runs keep the same
     stage structure).  Stage steps are where ``collect(policy=...)``
     commits lineage checkpoints (DESIGN.md §13.2).
+
+    ``est_rows`` / ``est_bytes`` are the planner's deterministic
+    predictions (manifest cardinality estimate + the packed-lane
+    live-bytes model, DESIGN.md §14) that the op-by-op instrumentation
+    audits against observed ``rows_out`` / ``peak_rss_delta_kb``.
     """
     index: int
     op: str
@@ -134,6 +139,8 @@ class PlanStep:
     a2a: int
     detail: str = ""
     stage: bool = False
+    est_rows: Optional[float] = None
+    est_bytes: Optional[int] = None
 
 
 class PhysicalPlan:
@@ -158,6 +165,7 @@ class PhysicalPlan:
         # the whole subtree) or run + commit.  None (the default) keeps
         # the executed program byte-identical to the hookless one.
         self.stage_hook = None
+        self._est_cache: Dict[int, float] = {}
         run, layout = self._lower(root)
         self.out_layout = layout
         self._run = run
@@ -201,9 +209,29 @@ class PhysicalPlan:
         run, layout = getattr(self, f"_lower_{node.kind}")(node)
         # every _lower_* appends its own step LAST, so steps[-1] here is
         # the node just lowered (children were appended before it)
-        step = self.steps[-1]
+        step = self._annotate(self.steps[-1], node)
         run = self._instrument(run, step, layout)
         return self._resilient(run, step, layout), layout
+
+    def _annotate(self, step: PlanStep, node: LogicalNode) -> PlanStep:
+        """Stamp the step with its predicted cardinality and live bytes
+        (manifests + schema widths only — deterministic, no data read).
+        Safe to replace in-place: run closures capture only the index."""
+        from repro.telemetry import memory as M
+
+        from .rules import estimated_rows
+
+        est = estimated_rows(node, self._est_cache)
+        rows_in = sum(estimated_rows(i, self._est_cache)
+                      for i in node.inputs)
+        cols_in = max((len(i.schema) for i in node.inputs), default=0)
+        est_bytes = M.step_live_bytes(
+            step.op, rows_in=rows_in, rows_out=est, cols_in=cols_in,
+            cols_out=len(node.schema), exchanges=step.a2a,
+            n_shards=self.ctx.n_shards)
+        step = dataclasses.replace(step, est_rows=est, est_bytes=est_bytes)
+        self.steps[step.index] = step
+        return step
 
     def _resilient(self, run: Callable, step: PlanStep,
                    layout: Layout) -> Callable:
@@ -241,17 +269,24 @@ class PhysicalPlan:
         label = f"plan.{step.index}.{step.op}"
 
         def wrapped(tables):
+            from repro.telemetry import memory as M
+
             rec = telemetry.current()
             if rec is None or telemetry.tracing():
                 return run(tables)
-            with rec.span(label, op=step.op, strategy=step.strategy,
-                          a2a=step.a2a, layout=layout.describe()) as sp:
-                out, ovs = run(tables)
-                sp.block(out)
-                rows = telemetry.record._rows_of(out)
-                if rows is not None:
-                    sp.attrs["rows_out"] = rows
-            rec.observe_step(step.index, time_us=sp.dur_us, rows_out=rows)
+            with M.RssWatermark() as wm:
+                with rec.span(label, op=step.op, strategy=step.strategy,
+                              a2a=step.a2a, layout=layout.describe(),
+                              est_rows=step.est_rows,
+                              est_bytes=step.est_bytes) as sp:
+                    out, ovs = run(tables)
+                    sp.block(out)
+                    rows = telemetry.record._rows_of(out)
+                    if rows is not None:
+                        sp.attrs["rows_out"] = rows
+            sp.attrs["peak_rss_delta_kb"] = wm.delta_kb
+            rec.observe_step(step.index, time_us=sp.dur_us, rows_out=rows,
+                             peak_rss_delta_kb=wm.delta_kb)
             return out, ovs
 
         return wrapped

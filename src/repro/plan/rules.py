@@ -45,7 +45,7 @@ them to keep every column a consumer might touch.
 """
 from __future__ import annotations
 
-from typing import List, Set, Tuple
+from typing import List, Optional, Set, Tuple
 
 from repro.io.scan import ColumnPredicate
 
@@ -96,11 +96,56 @@ def _pred_selectivity(p: ColumnPredicate, dataset) -> float:
     return _SELECTIVITY[p.op]
 
 
-def estimated_rows(node: LogicalNode) -> float:
+def _key_width(node: LogicalNode, column: str) -> Optional[float]:
+    """Distinct-value bound for ``column`` from the manifest stats of
+    scans below ``node``: an integer-valued global ``(min, max)`` range
+    admits at most ``max - min + 1`` distinct values.  ``None`` when no
+    scan below carries integral bounds for the column (sources have no
+    manifests — estimates never read data)."""
+    best = None
+    for sub in L.walk(node):
+        if sub.kind != "scan":
+            continue
+        bounds = sub.payload["dataset"].stat_bounds(column)
+        if bounds is None:
+            continue
+        lo, hi = float(bounds[0]), float(bounds[1])
+        if lo != int(lo) or hi != int(hi) or hi < lo:
+            continue
+        width = hi - lo + 1.0
+        best = width if best is None else min(best, width)
+    return best
+
+
+def _distinct_combos(node: LogicalNode) -> Optional[float]:
+    """Upper bound on distinct key-combos a groupby can emit, from the
+    per-key manifest ranges (``None`` when any key is unbounded)."""
+    combos = 1.0
+    for key in node.payload["keys"]:
+        width = _key_width(node.inputs[0], key)
+        if width is None:
+            return None
+        combos *= width
+    return combos
+
+
+def estimated_rows(node: LogicalNode, cache: Optional[dict] = None) -> float:
     """Upper-ish row estimate from manifest stats and selectivity priors.
 
-    Used only to ORDER join inputs — absolute accuracy is not required,
-    and the estimate is deterministic (no data is read)."""
+    Orders join inputs (rule ``reorder-join-inputs``) and is stamped on
+    every :class:`~repro.plan.physical.PlanStep` as ``est_rows`` for the
+    cardinality audit (DESIGN.md §14.1) — deterministic, manifests only,
+    no data is ever read.  ``cache`` (id-keyed) amortizes the recursion
+    when the physical planner estimates every node of one tree."""
+    if cache is not None and id(node) in cache:
+        return cache[id(node)]
+    est = _estimated_rows(node, cache)
+    if cache is not None:
+        cache[id(node)] = est
+    return est
+
+
+def _estimated_rows(node: LogicalNode, cache: Optional[dict]) -> float:
     if node.kind == "source":
         return float(int(node.payload["table"].num_rows()))
     if node.kind == "scan":
@@ -115,7 +160,7 @@ def estimated_rows(node: LogicalNode) -> float:
             kept *= _pred_selectivity(p, ds)
         return kept
     if node.kind == "filter":
-        est = estimated_rows(node.inputs[0])
+        est = estimated_rows(node.inputs[0], cache)
         pred = node.payload["predicate"]
         if _structured(pred):
             for p in pred:
@@ -123,13 +168,15 @@ def estimated_rows(node: LogicalNode) -> float:
             return est
         return est * 0.5
     if node.kind == "join":
-        return max(estimated_rows(node.inputs[0]),
-                   estimated_rows(node.inputs[1]))
+        return max(estimated_rows(node.inputs[0], cache),
+                   estimated_rows(node.inputs[1], cache))
     if node.kind == "groupby":
-        return estimated_rows(node.inputs[0])
+        est = estimated_rows(node.inputs[0], cache)
+        combos = _distinct_combos(node)
+        return est if combos is None else min(est, combos)
     if node.kind == "topk":
         return float(node.payload["k"])
-    return estimated_rows(node.inputs[0])
+    return estimated_rows(node.inputs[0], cache)
 
 
 # ===========================================================================

@@ -676,6 +676,7 @@ def _finish(store: SpillStore, ctx, partitioning, report, stats,
         rec.metrics.gauge("spill.pairs", stats.pairs)
         rec.metrics.gauge("spill.rows_in", stats.rows_in)
         rec.metrics.gauge("spill.rows_out", stats.rows_out)
+        telemetry.publish_pressure(rec, "spill")
         rec.record_overflow(report)
     return SpillResult(store, ctx, partitioning, report, stats, out_schema)
 

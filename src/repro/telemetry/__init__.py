@@ -25,8 +25,15 @@ Typical session::
 from .audit import (JAXPR_PRIMITIVES, compiled_collectives, hlo_collectives,
                     jaxpr_collectives, jaxpr_exchanges, program_audit,
                     top_collectives, trace_collectives)
+from .cardinality import (DEFAULT_QERROR_THRESHOLD, CardinalityAuditError,
+                          audit_cardinality, q_error, record_qerrors,
+                          step_qerrors)
 from .export import (chrome_trace_events, export_chrome_trace,
                      export_metrics, metrics_snapshot)
+from .ledger import (append as ledger_append, bench_record, collect_record,
+                     read as ledger_read)
+from .memory import (RssWatermark, peak_rss_kb, publish_pressure,
+                     reset_peak_rss, rss_kb, step_live_bytes)
 from .record import (Collector, Metrics, Span, current, operator_call, span,
                      trace, traced, tracing, using)
 
@@ -38,4 +45,9 @@ __all__ = [
     "top_collectives", "trace_collectives",
     "chrome_trace_events", "export_chrome_trace", "export_metrics",
     "metrics_snapshot",
+    "DEFAULT_QERROR_THRESHOLD", "CardinalityAuditError", "audit_cardinality",
+    "q_error", "record_qerrors", "step_qerrors",
+    "RssWatermark", "peak_rss_kb", "publish_pressure", "reset_peak_rss",
+    "rss_kb", "step_live_bytes",
+    "ledger_append", "ledger_read", "bench_record", "collect_record",
 ]

@@ -1,16 +1,25 @@
 """Exporters: Chrome ``trace_event`` JSON and a flat metrics dump.
 
-``export_chrome_trace`` writes the span tree in the Trace Event Format
-(complete ``"ph": "X"`` events), loadable by Perfetto / ``chrome://
-tracing``.  ``metrics_snapshot`` flattens a collector — metrics, plan
-audits, per-step observations — into one JSON-serializable dict that
-``benchmarks/run.py`` attaches to bench records, so a perf number ships
-with the collective counts and bytes that explain it.
+``export_chrome_trace`` writes the span tree in the Trace Event Format,
+loadable by Perfetto / ``chrome://tracing``: complete ``"ph": "X"``
+events for spans, ``"ph": "C"`` counter tracks for every gauge, and
+``"ph": "M"`` process/thread-name metadata so spans group into one lane
+per subsystem phase (``plan.*``, ``spill.*``, ``recovery.*``, ...)
+instead of a single flat track.  ``metrics_snapshot`` flattens a
+collector — metrics, plan audits, per-step observations — into one
+JSON-serializable dict that ``benchmarks/run.py`` attaches to bench
+records, so a perf number ships with the collective counts and bytes
+that explain it.
 """
 from __future__ import annotations
 
 import json
 from typing import Any, Dict, List
+
+#: span-name prefixes → one Perfetto lane each (tid 1..n; unknown
+#: prefixes share tid 0, the "main" lane)
+PHASE_LANES = ("plan", "io", "scan", "spill", "recovery", "workflow",
+               "table", "exchange", "bench")
 
 
 def _jsonable(v):
@@ -21,23 +30,58 @@ def _jsonable(v):
         return repr(v)
 
 
-def chrome_trace_events(collector) -> List[Dict[str, Any]]:
-    """The collector's span tree as Trace Event Format complete events."""
-    events = []
+def _lane(name: str) -> int:
+    prefix = name.split(".", 1)[0]
+    try:
+        return PHASE_LANES.index(prefix) + 1
+    except ValueError:
+        return 0
 
-    def emit(span, depth):
+
+def chrome_trace_events(collector) -> List[Dict[str, Any]]:
+    """Span tree + gauges as Trace Event Format events.
+
+    Spans are complete ``X`` events placed on a per-phase lane (tid);
+    ``M`` metadata events name the process (the collector) and each used
+    lane; every gauge becomes one ``C`` counter sample stamped at the
+    trace end so Perfetto renders it as a counter track.
+    """
+    events: List[Dict[str, Any]] = []
+    used_lanes = {0}
+    end_ts = 0.0
+
+    def emit(span):
+        nonlocal end_ts
+        tid = _lane(span.name)
+        used_lanes.add(tid)
+        end_ts = max(end_ts, span.t0_us + span.dur_us)
         events.append({
             "name": span.name, "ph": "X", "cat": "repro",
             "ts": round(span.t0_us, 3), "dur": round(span.dur_us, 3),
-            "pid": 0, "tid": 0,
+            "pid": 0, "tid": tid,
             "args": {k: _jsonable(v) for k, v in span.attrs.items()},
         })
         for c in span.children:
-            emit(c, depth + 1)
+            emit(c)
 
     for root in collector.spans:
-        emit(root, 0)
-    return events
+        emit(root)
+
+    meta: List[Dict[str, Any]] = [{
+        "name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+        "args": {"name": collector.name}}]
+    for tid in sorted(used_lanes):
+        lane = "main" if tid == 0 else PHASE_LANES[tid - 1]
+        meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+                     "tid": tid, "args": {"name": lane}})
+        meta.append({"name": "thread_sort_index", "ph": "M", "pid": 0,
+                     "tid": tid, "args": {"sort_index": tid}})
+
+    counters = [{
+        "name": gname, "ph": "C", "cat": "repro", "pid": 0, "tid": 0,
+        "ts": round(end_ts, 3), "args": {"value": _jsonable(v)}}
+        for gname, v in sorted(collector.metrics.gauges.items())]
+    return meta + events + counters
 
 
 def export_chrome_trace(collector, path: str) -> str:

@@ -27,6 +27,7 @@ import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro import telemetry
 from repro.resilience.policy import FaultPolicy, RetryBudgetExceeded
 
 
@@ -86,6 +87,7 @@ class WorkflowEngine:
         in the workflow engine)."""
         results: Dict[str, Any] = dict(context or {})
         order = self._topo_order()
+        rec = telemetry.current()
         for name in order:
             task = self.tasks[name]
             digest = _task_hash(name, task.deps)
@@ -100,14 +102,24 @@ class WorkflowEngine:
                         f"stale journal: task {name} was journaled with a "
                         f"different definition (hash {done.get('hash')!r} != "
                         f"{digest!r}); delete {self.journal_path} to rerun")
+                if rec is not None:
+                    rec.metrics.count("workflow.replayed")
                 continue
             kwargs = {d: results.get(d) for d in task.deps}
             pol = task.policy or self.policy or FaultPolicy(
                 max_retries=task.retries, backoff_base=0.005,
                 backoff_max=0.1)
+            attempts = [0]
+
+            def call(_task=task, _kwargs=kwargs, _attempts=attempts):
+                _attempts[0] += 1
+                return _task.fn(**_kwargs)
+
             try:
-                results[name] = pol.run(lambda: task.fn(**kwargs),
-                                        site=f"workflow.{name}")
+                with telemetry.span(f"workflow.{name}",
+                                    deps=list(task.deps)) as sp:
+                    results[name] = pol.run(call, site=f"workflow.{name}")
+                    sp.attrs["attempts"] = attempts[0]
             except RetryBudgetExceeded as e:
                 raise WorkflowError(
                     f"task {name} failed after {pol.max_retries + 1} attempts"
@@ -116,6 +128,11 @@ class WorkflowEngine:
                 raise WorkflowError(
                     f"task {name} raised non-retryable "
                     f"{type(e).__name__}: {e}") from e
+            finally:
+                if rec is not None and attempts[0] > 1:
+                    rec.metrics.count("workflow.retries", attempts[0] - 1)
+            if rec is not None:
+                rec.metrics.count("workflow.tasks_run")
             self._done[name] = {"hash": digest}
             self._journal()
         return results

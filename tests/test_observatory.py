@@ -1,0 +1,428 @@
+"""Query-observatory tests (DESIGN.md §14).
+
+Three pillars over the off-by-default collector:
+
+  * **cardinality audit** — every physical step carries the planner's
+    ``est_rows``; op-by-op collects observe ``rows_out``; the q-error
+    closes the loop, ``qerror_threshold`` enforces it, and ``refine()``
+    re-takes join-order decisions from observed rows (parity-tested).
+  * **memory accounting** — analytic ``est_bytes`` per step from the
+    packed-lane model, host RSS watermark deltas per step, pressure
+    gauges from scan/spill, and the peak-memory footer in
+    ``explain(analyze=True)``.
+  * **run-history ledger** — one JSONL record per collect/bench run
+    keyed by plan fingerprint; ``scripts/perf_report.py`` renders
+    cross-run deltas and flags regressions; crashed runs leave no
+    record, resumed runs share the original fingerprint.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core import local_context
+from repro.dataframe.frame import DataFrame
+from repro.io.scan import pred
+from repro.plan import LazyFrame
+from repro.plan.frame import optimize
+from repro.plan import logical as L
+from repro.resilience import FatalInjectedFault, FaultPolicy, arm, reset
+from repro.telemetry import (CardinalityAuditError, ledger, q_error,
+                             step_qerrors)
+from repro.telemetry import memory as M
+from repro.workflow.engine import Task, WorkflowEngine
+
+SCRIPTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    reset()
+    yield
+    reset()
+
+
+def _perf_report():
+    spec = importlib.util.spec_from_file_location(
+        "perf_report", os.path.join(SCRIPTS, "perf_report.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _df(ctx, n=64, seed=0, n_keys=8):
+    rng = np.random.default_rng(seed)
+    return DataFrame.from_dict(
+        {"k": rng.integers(0, n_keys, n).astype(np.float32),
+         "v": rng.normal(size=n).astype(np.float32)}, ctx,
+        bucket_factor=4.0)
+
+
+# ---------------------------------------------------------------------------
+# pillar 1: cardinality audit
+# ---------------------------------------------------------------------------
+def test_q_error_math():
+    assert q_error(10, 10) == 1.0
+    assert q_error(100, 10) == 10.0
+    assert q_error(10, 100) == 10.0, "symmetric: over == under"
+    assert q_error(0, 0) == 1.0, "empty-vs-empty is exact, not 0/0"
+    assert q_error(0, 5) == 5.0
+
+
+def test_plan_steps_carry_estimates():
+    ctx = local_context()
+    big = _df(ctx, n=96)
+    small = DataFrame.from_dict(
+        {"k": np.arange(8, dtype=np.float32),
+         "w": np.arange(8, dtype=np.float32)}, ctx, bucket_factor=4.0)
+    lf = (big.lazy().join(small.lazy(), ["k"], max_matches=4)
+          .groupby(["k"], [("v", "sum")]).sort_values("k"))
+    plan = lf.physical_plan()
+    for s in plan.steps:
+        assert s.est_rows is not None and s.est_rows > 0, s
+        assert s.est_bytes is not None and s.est_bytes > 0, s
+    # estimates are deterministic: two lowerings agree exactly
+    again = lf.physical_plan()
+    assert [(s.est_rows, s.est_bytes) for s in plan.steps] == \
+           [(s.est_rows, s.est_bytes) for s in again.steps]
+
+
+def test_plain_explain_is_deterministic_with_est_rows():
+    ctx = local_context()
+    lf = _df(ctx).lazy().groupby(["k"], [("v", "sum")])
+    first = lf.explain()
+    assert "est_rows=" in first, "plain explain must show the estimate"
+    assert first == lf.explain(), "est_rows must not break determinism"
+
+
+def test_collect_records_qerrors_and_threshold_enforces():
+    ctx = local_context()
+    n = 64
+    # every row matches the == predicate, but the prior says 10% — a
+    # deliberate 10x miss the audit must both RECORD and ENFORCE
+    df = DataFrame.from_dict(
+        {"k": np.full(n, 5.0, np.float32),
+         "v": np.arange(n, dtype=np.float32)}, ctx, bucket_factor=4.0)
+    lf = df.lazy().filter([pred("k", "==", 5.0)])
+
+    with telemetry.trace("qerr") as rec:
+        out = lf.collect(telemetry=rec, jit=False)   # no threshold: records
+    assert len(out) == n
+    qs = step_qerrors(rec)
+    filt = max(qs.values())
+    assert abs(filt - 10.0) < 0.01, qs
+    facts = rec.plan_steps[max(qs, key=qs.get)]
+    assert facts["qerr"] == 10.0
+    assert rec.metrics.gauges["cardinality.max_qerror"] == 10.0
+    assert rec.metrics.gauges["cardinality.steps_audited"] == len(qs)
+
+    with telemetry.trace("qerr-strict") as rec2:
+        with pytest.raises(CardinalityAuditError, match="filter"):
+            lf.collect(telemetry=rec2, jit=False, qerror_threshold=4.0)
+
+    # enforcement is a strict-mode contract only
+    with telemetry.trace("qerr-lax") as rec3:
+        lf.collect(telemetry=rec3, jit=False, strict=False,
+                   qerror_threshold=4.0)
+
+
+def test_refine_repins_join_order_from_observed_rows():
+    ctx = local_context()
+    n = 64
+    rng = np.random.default_rng(1)
+    # big's == filter keeps ALL rows but is estimated at 10% → the
+    # estimate rule sees 6.4 vs 32 and swaps; observation says 64 vs 32
+    big = DataFrame.from_dict(
+        {"k": (np.arange(n) % 8).astype(np.float32),
+         "c": np.full(n, 5.0, np.float32),
+         "v": rng.normal(size=n).astype(np.float32)}, ctx,
+        bucket_factor=4.0)
+    small = DataFrame.from_dict(
+        {"k": (np.arange(32) % 8).astype(np.float32),
+         "w": np.arange(32, dtype=np.float32)}, ctx, bucket_factor=4.0)
+    lf = (big.lazy().filter([pred("c", "==", 5.0)])
+          .join(small.lazy(), ["k"], max_matches=64, reorder=True)
+          .groupby(["k"], [("v", "sum"), ("w", "sum")])
+          .sort_values("k"))
+
+    root, _ = optimize(lf.logical_plan)
+    join = next(nd for nd in L.walk(root) if nd.kind == "join")
+    assert join.payload["swap"] is True, "estimate rule must have fired"
+
+    with telemetry.trace("refine") as rec:
+        oracle = lf.collect(telemetry=rec, jit=False).to_numpy()
+
+    refined = lf.refine(rec)
+    rjoin = next(nd for nd in L.walk(refined.logical_plan)
+                 if nd.kind == "join")
+    assert rjoin.payload["swap"] is False, "observed 64>32: unswap"
+    assert rjoin.payload["reorder"] is False, "decision must be PINNED"
+    # the pin survives re-optimization on the next collect
+    reroot, _ = optimize(refined.logical_plan)
+    assert next(nd for nd in L.walk(reroot)
+                if nd.kind == "join").payload["swap"] is False
+
+    got = refined.collect().to_numpy()
+    assert sorted(got) == sorted(oracle)
+    for col in oracle:
+        np.testing.assert_allclose(got[col], oracle[col], rtol=1e-5,
+                                   err_msg=col)
+
+
+# ---------------------------------------------------------------------------
+# pillar 2: memory accounting
+# ---------------------------------------------------------------------------
+def test_rss_probes_and_watermark():
+    kb = M.rss_kb()
+    peak = M.peak_rss_kb()
+    assert kb is not None and kb > 0
+    assert peak is not None and peak >= kb * 0.5  # VmHWM never lags far
+    with M.RssWatermark() as wm:
+        ballast = np.ones(1 << 20, dtype=np.float64)  # 8 MiB
+        ballast[0] = 2.0
+    assert wm.delta_kb >= 0.0
+    rec = telemetry.Collector("mem")
+    M.publish_pressure(rec, "x")
+    assert rec.metrics.gauges["x.pressure.rss_mb"] > 0
+    assert rec.metrics.gauges["x.pressure.peak_rss_mb"] > 0
+
+
+def test_step_live_bytes_model_shapes():
+    base = M.step_live_bytes("filter", rows_in=100, rows_out=50,
+                             cols_in=3, cols_out=3, exchanges=0,
+                             n_shards=1)
+    assert base > 0
+    more_rows = M.step_live_bytes("filter", rows_in=1000, rows_out=500,
+                                  cols_in=3, cols_out=3, exchanges=0,
+                                  n_shards=1)
+    assert more_rows > base, "model must scale with rows"
+    exch = M.step_live_bytes("groupby", rows_in=100, rows_out=50,
+                             cols_in=3, cols_out=3, exchanges=1,
+                             n_shards=4)
+    no_exch = M.step_live_bytes("groupby", rows_in=100, rows_out=50,
+                                cols_in=3, cols_out=3, exchanges=0,
+                                n_shards=4)
+    assert exch > no_exch, "exchanges stage extra input copies"
+    spill = M.step_live_bytes("join", rows_in=100, rows_out=100,
+                              cols_in=3, cols_out=4, exchanges=0,
+                              n_shards=1, spill_bytes=4096)
+    dry = M.step_live_bytes("join", rows_in=100, rows_out=100,
+                            cols_in=3, cols_out=4, exchanges=0,
+                            n_shards=1)
+    assert spill - dry == 4096, "spill run bytes are additive"
+
+
+def test_collect_observes_memory_and_analyze_footer():
+    ctx = local_context()
+    lf = (_df(ctx, n=96).lazy()
+          .groupby(["k"], [("v", "sum")]).sort_values("k"))
+    with telemetry.trace("mem") as rec:
+        lf.collect(telemetry=rec, jit=False)
+    for idx, facts in rec.plan_steps.items():
+        assert facts["est_bytes"] > 0, (idx, facts)
+        assert facts["peak_rss_delta_kb"] >= 0, (idx, facts)
+    sp = next(s for s in rec.all_spans() if s.name.startswith("plan.")
+              and "peak_rss_delta_kb" in s.attrs)
+    assert sp.attrs["est_bytes"] > 0
+    txt = lf.explain(analyze=True)
+    assert "memory: est_live=" in txt, txt
+    assert "peak_rss_delta=" in txt, txt
+
+
+def test_scan_publishes_pressure_gauges(tmp_path):
+    ctx = local_context()
+    data = {"a": np.arange(64, dtype=np.float32),
+            "b": np.arange(64, dtype=np.float32)}
+    path = str(tmp_path / "press_ds")
+    DataFrame.from_dict(data, ctx).to_hpt(path, rows_per_group=16)
+    with telemetry.trace("press") as rec:
+        DataFrame.read_parquet(path, ctx)
+    assert rec.metrics.gauges["scan.pressure.rss_mb"] > 0
+    assert rec.metrics.gauges["scan.pressure.peak_rss_mb"] > 0
+
+
+# ---------------------------------------------------------------------------
+# pillar 3: run-history ledger + perf report
+# ---------------------------------------------------------------------------
+def test_ledger_roundtrip_skips_torn_line(tmp_path):
+    path = str(tmp_path / "led" / "runs.jsonl")
+    ledger.append(path, {"fingerprint": "fp0", "wall_s": 1.0})
+    ledger.append(path, {"fingerprint": "fp0", "wall_s": 2.0})
+    with open(path, "a") as f:
+        f.write('{"fingerprint": "fp0", "wall')   # crash mid-append
+    recs = ledger.read(path)
+    assert [r["wall_s"] for r in recs] == [1.0, 2.0]
+    assert ledger.read(str(tmp_path / "missing.jsonl")) == []
+
+
+def test_collect_appends_fingerprinted_ledger_records(tmp_path):
+    ctx = local_context()
+    path = str(tmp_path / "runs.jsonl")
+    lf = _df(ctx).lazy().groupby(["k"], [("v", "sum")])
+    lf.collect(ledger=path)                       # un-instrumented run
+    with telemetry.trace("led") as rec:
+        lf.collect(telemetry=rec, jit=False, ledger=path)
+    recs = ledger.read(path)
+    assert len(recs) == 2
+    assert recs[0]["fingerprint"] == recs[1]["fingerprint"]
+    assert recs[0]["kind"] == "collect"
+    assert recs[0]["wall_s"] > 0
+    assert recs[0]["max_qerror"] is None, "no collector: identity only"
+    assert recs[1]["max_qerror"] >= 1.0
+    assert recs[1]["steps"] == len(rec.plan_steps)
+    assert recs[1]["qerrors"], "instrumented run files per-step q-errors"
+    assert recs[1]["audit_consistent"] is True
+    assert recs[1]["peak_rss_mb"] > 0
+
+
+def test_crash_leaves_no_record_and_resume_shares_fingerprint(tmp_path):
+    ctx = local_context()
+    path = str(tmp_path / "runs.jsonl")
+    ckdir = str(tmp_path / "stages")
+    pol = FaultPolicy(max_retries=1, backoff_base=0.001, backoff_max=0.01,
+                      checkpoint_dir=ckdir, keep_checkpoints=True)
+    big = _df(ctx, n=96)
+    small = DataFrame.from_dict(
+        {"k": np.arange(8, dtype=np.float32),
+         "w": np.arange(8, dtype=np.float32)}, ctx, bucket_factor=4.0)
+
+    def build():
+        return (big.lazy().join(small.lazy(), ["k"], max_matches=4)
+                .groupby(["k"], [("v", "sum"), ("w", "max")])
+                .sort_values("k"))
+
+    plan = build().physical_plan()
+    last = plan.steps[-1].index
+    assert sum(1 for s in plan.steps if s.stage) >= 2, \
+        "need a committed prefix below the injected fault"
+
+    rec1 = telemetry.Collector("run1")
+    oracle = build().collect(telemetry=rec1, policy=pol,
+                             ledger=path).to_numpy()
+    assert rec1.metrics.counters["recovery.stages_committed"] >= 2
+    assert len(ledger.read(path)) == 1
+
+    # fatal at the LAST step: everything below it already committed,
+    # the process "dies" before the ledger append
+    arm(f"plan.step.{last}", "fatal")
+    rec2 = telemetry.Collector("run2")
+    with pytest.raises(FatalInjectedFault):
+        build().collect(telemetry=rec2, policy=pol, ledger=path)
+    assert len(ledger.read(path)) == 1, "crashed run must leave no record"
+
+    rec3 = telemetry.Collector("run3")
+    got = build().collect(telemetry=rec3, policy=pol,
+                          ledger=path).to_numpy()
+    for k, v in oracle.items():
+        np.testing.assert_array_equal(v, got[k], err_msg=k)
+    # the resumed run restored the committed prefix instead of re-running
+    assert rec3.metrics.counters["recovery.stages_restored"] >= 1
+    recs = ledger.read(path)
+    assert len(recs) == 2
+    assert recs[0]["fingerprint"] == recs[1]["fingerprint"], \
+        "a resumed run is the SAME pipeline: one ledger key"
+    assert recs[1]["counters"]["recovery.stages_restored"] >= 1
+
+
+def test_perf_report_flags_exactly_the_regressed_fingerprints(tmp_path):
+    pr = _perf_report()
+    ctx = local_context()
+    path = str(tmp_path / "runs.jsonl")
+    lf = _df(ctx).lazy().groupby(["k"], [("v", "sum")])
+    lf.collect()                                   # warm caches off-ledger
+    lf.collect(ledger=path)                        # baseline record
+    # chaos-armed retry: the whole-plan retry backs off ~0.8s before the
+    # (disarmed) rerun succeeds — a deterministic >30% slowdown
+    arm("plan.step.0", "io_error")
+    lf.collect(ledger=path, policy=FaultPolicy(
+        max_retries=2, backoff_base=0.8, backoff_factor=1.0,
+        backoff_max=0.8, jitter=0.0))
+    [slow_fp] = {r["fingerprint"] for r in ledger.read(path)}
+
+    # a healthy fingerprint (mild jitter) and a q-error-drifting one
+    ledger.append(path, {"fingerprint": "stable:demo", "kind": "collect",
+                         "wall_s": 1.0, "max_qerror": 1.2})
+    ledger.append(path, {"fingerprint": "stable:demo", "kind": "collect",
+                         "wall_s": 1.1, "max_qerror": 1.25})
+    ledger.append(path, {"fingerprint": "drifty:demo", "kind": "collect",
+                         "wall_s": 1.0, "max_qerror": 1.0})
+    ledger.append(path, {"fingerprint": "drifty:demo", "kind": "collect",
+                         "wall_s": 1.0, "max_qerror": 3.0})
+
+    rows = pr.fingerprint_deltas(ledger.read(path))
+    flagged = {r["fingerprint"]: r["flags"] for r in rows if r["flags"]}
+    assert set(flagged) == {slow_fp, "drifty:demo"}, flagged
+    assert flagged[slow_fp] == ["TIME"]
+    assert flagged["drifty:demo"] == ["QERR"]
+
+    out = str(tmp_path / "report.md")
+    assert pr.main([path, "--out", out, "--gate"]) == 1
+    text = open(out).read()
+    assert "**TIME**" in text and "**QERR**" in text
+    assert "2 regression(s) flagged" in text
+
+    # a single-run ledger renders as baseline and gates green
+    clean = str(tmp_path / "clean.jsonl")
+    ledger.append(clean, {"fingerprint": "a", "wall_s": 1.0})
+    assert pr.main([clean, "--out", str(tmp_path / "clean.md"),
+                    "--gate"]) == 0
+    assert "| baseline |" in open(str(tmp_path / "clean.md")).read()
+
+
+def test_bench_record_shape():
+    r = ledger.bench_record("shuffle", 1234.5, derived="p50",
+                            peak_rss_mb=99.5,
+                            telemetry={"collectives": {"all-to-all": 3}})
+    assert r["fingerprint"] == "bench:shuffle"
+    assert r["kind"] == "bench"
+    assert r["wall_s"] == pytest.approx(1234.5e-6, rel=1e-3)
+    assert r["observed_a2a"] == 3
+    assert r["peak_rss_mb"] == 99.5
+
+
+# ---------------------------------------------------------------------------
+# satellite: workflow engine observability
+# ---------------------------------------------------------------------------
+def test_workflow_spans_retries_and_replay_counters(tmp_path):
+    class Flaky(RuntimeError):
+        pass
+
+    journal = str(tmp_path / "journal.json")
+    state = {"fails": 1}
+
+    def make_engine():
+        def a():
+            return 10
+
+        def b(a):
+            if state["fails"] > 0:
+                state["fails"] -= 1
+                raise Flaky("transient")
+            return a + 1
+
+        pol = FaultPolicy(max_retries=2, backoff_base=0.001,
+                          backoff_max=0.002)
+        return (WorkflowEngine(journal_path=journal, policy=pol)
+                .add(Task("a", a)).add(Task("b", b, deps=("a",))))
+
+    with telemetry.trace("wf") as rec:
+        results = make_engine().run()
+    assert results["b"] == 11
+    names = [s.name for s in rec.all_spans()]
+    assert "workflow.a" in names and "workflow.b" in names
+    sb = next(s for s in rec.all_spans() if s.name == "workflow.b")
+    assert sb.attrs["attempts"] == 2
+    assert sb.attrs["deps"] == ["a"]
+    assert rec.metrics.counters["workflow.tasks_run"] == 2
+    assert rec.metrics.counters["workflow.retries"] == 1
+
+    # resume from the journal: both tasks replay, nothing re-runs
+    with telemetry.trace("wf2") as rec2:
+        make_engine().run()
+    assert rec2.metrics.counters["workflow.replayed"] == 2
+    assert "workflow.tasks_run" not in rec2.metrics.counters
+    assert not any(s.name.startswith("workflow.")
+                   for s in rec2.all_spans())

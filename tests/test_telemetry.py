@@ -191,12 +191,24 @@ def test_chrome_trace_and_metrics_export(tmp_path):
     with open(tpath) as f:
         data = json.load(f)
     evs = data["traceEvents"]
-    assert {e["name"] for e in evs} == {"parent", "child"}
-    assert all(e["ph"] == "X" for e in evs)
-    parent = next(e for e in evs if e["name"] == "parent")
-    child = next(e for e in evs if e["name"] == "child")
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in spans} == {"parent", "child"}
+    parent = next(e for e in spans if e["name"] == "parent")
+    child = next(e for e in spans if e["name"] == "child")
     assert parent["ts"] <= child["ts"], "child opens inside parent"
     assert parent["args"]["kind"] == "demo"
+    # metadata names the process + every used lane (Perfetto grouping)
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert any(e["name"] == "process_name"
+               and e["args"]["name"] == "export" for e in meta)
+    tids = {e["tid"] for e in spans}
+    named = {e["tid"] for e in meta if e["name"] == "thread_name"}
+    assert tids <= named, "every span lane must carry a thread_name"
+    # gauges become counter tracks stamped at trace end
+    counters = [e for e in evs if e["ph"] == "C"]
+    level = next(e for e in counters if e["name"] == "demo.level")
+    assert level["args"]["value"] == 7
+    assert level["ts"] >= max(e["ts"] + e["dur"] for e in spans)
 
     snap = telemetry.metrics_snapshot(rec)
     assert snap["metrics"]["counters"]["demo.calls"] == 2
@@ -339,7 +351,10 @@ def test_telemetry_contract_4way(tmp_path):
               .window(["k2", "k1"], ["v_sum"]).agg([("v_sum", "sum")]))
         plan = lf.physical_plan()
         with telemetry.trace("contract") as rec:
-            out = lf.collect(telemetry=rec, jit=False)
+            # strict cardinality audit rides the representative chain:
+            # the distinct-combo bound must keep every q-error under the
+            # contract threshold (observed max ~1.25; margin to 2.0)
+            out = lf.collect(telemetry=rec, jit=False, qerror_threshold=2.0)
         audit = rec.audits[-1]
         print("AUDIT predicted=%d traced=%d observed=%d" % (
             audit["predicted_a2a"], audit["traced_a2a"],
@@ -350,13 +365,21 @@ def test_telemetry_contract_4way(tmp_path):
         assert all(e["bytes"] > 0 for e in audit["exchanges"])
 
         # every exchanging step got its traced payload bytes; every step
-        # got measured time and rows
+        # got measured time and rows, plus the observatory facts:
+        # predicted (est_rows/est_bytes) and observed (qerr/rss delta)
         for s in plan.steps:
             facts = rec.plan_steps[s.index]
             assert facts["time_us"] > 0, (s.index, facts)
             assert facts["rows_out"] is not None
+            assert facts["est_rows"] is not None, (s.index, facts)
+            assert facts["est_bytes"] > 0, (s.index, facts)
+            assert 1.0 <= facts["qerr"] <= 2.0, (s.index, facts)
+            assert facts["peak_rss_delta_kb"] >= 0, (s.index, facts)
             if s.a2a:
                 assert facts["a2a_bytes"] > 0, (s.index, facts)
+        assert rec.metrics.gauges["cardinality.steps_audited"] == len(
+            plan.steps)
+        assert rec.metrics.gauges["cardinality.max_qerror"] <= 2.0
 
         txt = lf.explain(analyze=True)
         want = ("audit: predicted=%d traced=%d observed=%d"
